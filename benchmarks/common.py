@@ -1,0 +1,305 @@
+"""Shared benchmark substrate: a trained paper_tiny model + an
+outlier-planted variant (reproducing the paper's massive-activation
+pathology deterministically at CPU scale), with cached artifacts so
+re-running individual tables is fast.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+from repro.configs import (CushionConfig, QuantConfig, RunConfig, get_config)
+from repro.core import cushioncache as CC
+from repro.core.calibration import calibrate
+from repro.data.pipeline import Pipeline, SyntheticCorpus
+from repro.models.registry import build
+from repro.train.trainer import (eval_next_token_acc, eval_ppl,
+                                 make_optimizer, make_train_step)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+TRAIN_STEPS = 250
+SEQ = 128
+BATCH = 8
+
+
+class Bench:
+    def __init__(self, train_steps: int = TRAIN_STEPS):
+        self.cfg = get_config("paper_tiny")
+        self.api = build(self.cfg)
+        self.corpus = SyntheticCorpus(self.cfg.vocab_size, seed=0)
+        self.pipe = Pipeline(self.corpus, batch=BATCH, seq_len=SEQ, seed=0)
+        self.train_steps = train_steps
+        self._params = None
+        self._cushions: Dict[str, Any] = {}
+        self._search_times: Dict[str, float] = {}
+        os.makedirs(ART_DIR, exist_ok=True)
+        self.ckpt = CheckpointManager(os.path.join(ART_DIR, "ckpt"), keep=1)
+
+    # ------------------------------------------------------------------
+    @property
+    def params(self):
+        if self._params is not None:
+            return self._params
+        like = self.api.init_params(jax.random.PRNGKey(0))
+        if self.ckpt.latest_step() == self.train_steps:
+            self._params = self.ckpt.restore(self.train_steps, like=like)
+            return self._params
+        run = RunConfig(model=self.cfg, seq_len=SEQ, global_batch=BATCH,
+                        lr=2e-3, train_steps=self.train_steps,
+                        warmup_steps=20)
+        opt = make_optimizer(run)
+        st = opt.init(like)
+        step = jax.jit(make_train_step(self.api, run, opt))
+        params = like
+        for i in range(self.train_steps):
+            b = {k: jnp.asarray(v) for k, v in self.pipe.get_batch(i).items()}
+            params, st, m = step(params, st, b)
+        self.ckpt.save(self.train_steps, params)
+        self._params = params
+        return params
+
+    def planted(self):
+        """Outlier-planted variant reproducing the paper's *attention-
+        mediated* pathology (Bondarenko et al. 2023 mechanism):
+
+        In layer 1, head 0's value path injects O(100) magnitudes into a
+        block of channels for EVERY token; with near-uniform attention the
+        attention output carries massive activations (Table-5-style
+        10^2-10^3 : 1 top-1:median). A *sink* absorbs them: all head-0
+        queries carry a constant bias direction q0, and token id 1's key is
+        surgically aligned to kappa*q0 with its value projected out of the
+        spike channels — attending to the sink yields ~zero value. So a
+        prefix containing token 1 (or a tuned cushion KV playing the same
+        role) collapses head-0 attention onto the sink and the outliers
+        vanish — exactly the paper's Fig. 3 mechanism, planted
+        deterministically at CPU scale.
+        """
+        import numpy as np
+        params = jax.tree_util.tree_map(lambda a: a, self.params)
+        cfg = self.cfg
+        D, hd, H, K = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        rng = np.random.RandomState(42)
+        L = 1                       # plant in layer 1
+        attn = dict(jax.tree_util.tree_map(lambda a: a,
+                                           params["layers"]["attn"]))
+        wqkv = np.asarray(attn["wqkv"]).copy()      # (L, D, (H+2K)*hd)
+        bqkv = np.asarray(attn["bqkv"]).copy()
+
+        # 1. spike V path of kv-head 0, channels 0:8: every token's value
+        #    carries ~N(0, 120^2) in those channels
+        voff = (H + K) * hd
+        spike_cols = [voff + j for j in range(8)]
+        spike_w = rng.choice([-1.0, 1.0], size=(D, 8)) * (600.0 / np.sqrt(D))
+        wqkv[L][:, spike_cols] = spike_w
+
+        # 1b. sharpen head-0 content attention (near-argmax): the spike
+        #     lands coherently on each token instead of averaging out
+        koff = H * hd
+        wqkv[L][:, koff:koff + hd] *= 3.0
+
+        # 1c. localize the spike into 8 residual channels: wo passes the
+        #     spike o-channels straight through to channels 17..24 (this is
+        #     what makes the pathology per-CHANNEL, like the paper's)
+        wo = np.asarray(attn["wo"]).copy()          # (L, H*hd, D)
+        tgt = list(range(17, 25))
+        for g in range(H // K):
+            rows = [g * hd + j for j in range(8)]   # q-heads sharing kv0
+            wo[L][rows, :] = 0.0
+            if g == 0:
+                for rj, cj in zip(rows, tgt):
+                    wo[L][rj, cj] = 1.0
+        attn["wo"] = jnp.asarray(wo)
+
+        # 1d. isolate: downstream layers don't read the spike channels, so
+        #     the FP model's predictions survive the surgery (the paper's
+        #     models carry massive activations without FP damage)
+        for li in range(L + 1, cfg.n_layers):
+            wqkv[li][tgt, :] = 0.0
+        mlp_up = np.asarray(params["layers"]["mlp"]["w_up"]).copy()
+        mlp_gate = np.asarray(params["layers"]["mlp"]["w_gate"]).copy()
+        for li in range(L, cfg.n_layers):
+            mlp_up[li][tgt, :] = 0.0
+            mlp_gate[li][tgt, :] = 0.0
+        head = np.asarray(params["head"]["w"]).copy()
+        head[tgt, :] = 0.0
+
+        # 2. sink-seeking query bias for all q-heads reading kv-head 0
+        #    (GQA: q heads 0..H/K-1 share kv-head 0). q0 lives in the
+        #    SLOWEST rotary pair so RoPE barely rotates it over the
+        #    context (theta_min ~ 1e-4 rad/pos): the sink alignment is
+        #    position-invariant, as in trained models.
+        q0 = np.zeros(hd)
+        q0[hd // 2 - 1] = 1.0 / np.sqrt(2)
+        q0[hd - 1] = 1.0 / np.sqrt(2)
+        for qh in range(H // K):
+            bqkv[L][qh * hd:(qh + 1) * hd] = 6.0 * q0
+
+        # 3. vocab sinks, aligned to the tokens' EMPIRICAL layer-1 hidden
+        #    direction (embed + layer-0 output), computed by running the
+        #    model itself:
+        #    - token 1: a strong sink (kappa=100) for the greedy search to
+        #      discover (the paper's <bos>-like nonsemantic sink)
+        #    - the corpus' most frequent token: a weak sink (kappa=18), so
+        #      positions AFTER its first occurrence have a natural place to
+        #      dump attention — only the sequence head spikes, matching the
+        #      first-token massive-activation phenomenon (Sun et al. 2024)
+        emb = np.asarray(params["embed"]["w"]).copy()
+        r = rng.randn(D).astype(np.float32) * 0.5
+        emb[1] = r
+        params_emb = dict(params)
+        params_emb["embed"] = {"w": jnp.asarray(emb)}
+
+        # most frequent corpus token (bigram stationary mode)
+        cnt = np.bincount(np.concatenate(
+            [self.pipe.get_batch(i)["tokens"].ravel() for i in range(4)]),
+            minlength=cfg.vocab_size)
+        cnt[1] = 0
+        freq_tok = int(np.argmax(cnt))
+
+        def layer1_dir(tok_id):
+            """Empirical pre-norm layer-1 input direction for a token at
+            position 0."""
+            from repro.models import common as MC
+            from repro.models import transformer as TT
+            from repro.configs import QuantConfig as QC
+            x = jnp.asarray(emb[tok_id])[None, None, :]
+            lp0 = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+            h, _ = TT._block(lp0, x, cfg, QC(mode="none"),
+                             MC.placeholder_scales(TT.SITES, 1),
+                             {"k": jnp.zeros((0, K, hd)),
+                              "v": jnp.zeros((0, K, hd))},
+                             jnp.arange(1), False, 0)
+            hv = np.asarray(h)[0, 0]
+            g = np.asarray(params["layers"]["ln1"]["g"][L])
+            return hv / np.sqrt(np.mean(hv ** 2) + 1e-6) * g
+
+        q0n = q0
+        for tok_id, kappa in [(1, 100.0), (freq_tok, 18.0)]:
+            rn = layer1_dir(tok_id)
+            Wk0 = wqkv[L][:, koff:koff + hd]
+            Wk0 += np.outer(rn / (rn @ rn), kappa * q0n - rn @ Wk0)
+            wqkv[L][:, koff:koff + hd] = Wk0
+            # sink value ~ 0 in spike channels
+            cols = wqkv[L][:, spike_cols]
+            cols -= np.outer(rn / (rn @ rn), rn @ cols)
+            wqkv[L][:, spike_cols] = cols
+
+        attn["wqkv"] = jnp.asarray(wqkv)
+        attn["bqkv"] = jnp.asarray(bqkv)
+        layers = dict(params["layers"])
+        layers["attn"] = attn
+        layers["mlp"] = dict(layers["mlp"])
+        layers["mlp"]["w_up"] = jnp.asarray(mlp_up)
+        layers["mlp"]["w_gate"] = jnp.asarray(mlp_gate)
+        params = dict(params)
+        params["layers"] = layers
+        params["embed"] = {"w": jnp.asarray(emb)}
+        params["head"] = {"w": jnp.asarray(head)}
+        return params
+
+    # ------------------------------------------------------------------
+    def eval_batches(self, n=6):
+        return [{k: jnp.asarray(v)
+                 for k, v in self.pipe.get_batch(9000 + i).items()}
+                for i in range(n)]
+
+    def calib_batches(self, n=4):
+        return [{k: jnp.asarray(v)
+                 for k, v in self.pipe.get_batch(8000 + i).items()}
+                for i in range(n)]
+
+    def sample_fn(self, i):
+        b = self.pipe.get_batch(5000 + i)
+        return {"tokens": jnp.asarray(b["tokens"][:1]),
+                "labels": jnp.asarray(b["labels"][:1])}
+
+    def tune_iter(self):
+        i = 0
+        while True:
+            b = self.pipe.get_batch(6000 + i)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+            i += 1
+
+    # ------------------------------------------------------------------
+    def cushion_for(self, params, key: str, qcfg: QuantConfig,
+                    tune_steps: int = 60, skip_tune: bool = False):
+        tag = f"{key}|{qcfg.mode}|{qcfg.a_bits}|{skip_tune}"
+        if tag in self._cushions:
+            return self._cushions[tag]
+        # disk cache (re-running individual tables stays cheap)
+        safe = tag.replace("|", "_").replace("=", "-")
+        cpath = os.path.join(ART_DIR, "cushions", safe + ".npz")
+        tpath = cpath + ".times.json"
+        if os.path.exists(cpath):
+            data = np.load(cpath)
+            zero = self.api.cushion_zeros(int(data["prefix_len"]))
+            flat, treedef = jax.tree_util.tree_flatten(zero)
+            cushion = jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(data[f"a{i}"])
+                          for i in range(len(flat))])
+            if os.path.exists(tpath):
+                self._search_times[tag] = json.load(open(tpath))
+            self._cushions[tag] = cushion
+            return cushion
+        ccfg = CushionConfig(max_prefix_len=6, tau=0.98, n_candidates=48,
+                             tune_steps=tune_steps, tune_lr=2e-2, lam=0.05,
+                             seed_tokens=(1,))
+        t0 = time.time()
+        cushion, sr, tr = CC.discover(self.api, params, self.sample_fn,
+                                      self.tune_iter(), qcfg, ccfg,
+                                      jax.random.PRNGKey(7),
+                                      skip_tune=skip_tune, verbose=False)
+        self._search_times[tag] = {
+            "search_s": sr.wall_time_s,
+            "tune_s": tr.wall_time_s if tr else 0.0,
+            "prefix_len": int(len(sr.prefix_ids))}
+        self._cushions[tag] = cushion
+        os.makedirs(os.path.join(ART_DIR, "cushions"), exist_ok=True)
+        flat, _ = jax.tree_util.tree_flatten(cushion)
+        m = (cushion["kv"]["k"].shape[1] if "kv" in cushion
+             else len(sr.prefix_ids))
+        np.savez(cpath, prefix_len=m,
+                 **{f"a{i}": np.asarray(v) for i, v in enumerate(flat)})
+        with open(tpath, "w") as f:
+            json.dump(self._search_times[tag], f)
+        return cushion
+
+    def scales_for(self, params, qcfg: QuantConfig, cushion=None):
+        scales, _ = calibrate(self.api, params, self.calib_batches(), qcfg,
+                              cushion=cushion)
+        return scales
+
+    def ppl(self, params, qcfg, cushion=None, scales=None):
+        return eval_ppl(self.api, params, self.eval_batches(), qcfg,
+                        cushion=cushion, scales=scales)
+
+    def acc(self, params, qcfg, cushion=None, scales=None):
+        return eval_next_token_acc(self.api, params, self.eval_batches(),
+                                   qcfg, cushion=cushion, scales=scales)
+
+
+_BENCH: Optional[Bench] = None
+
+
+def get_bench() -> Bench:
+    global _BENCH
+    if _BENCH is None:
+        _BENCH = Bench()
+    return _BENCH
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, name), "w") as f:
+        json.dump(obj, f, indent=1, default=float)

@@ -1,0 +1,292 @@
+"""One benchmark per paper table (Tables 1-6, 8, 9). Each returns a dict and
+emits a CSV row `name,us_per_call,derived`. The subject model is the trained
+paper_tiny plus the outlier-planted variant (paper-scale LLMs are not
+loadable offline; DESIGN.md §7 documents the correspondence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, get_bench, save_json
+from repro.configs import QuantConfig
+from repro.core import outliers
+from repro.core.smoothquant import apply_smoothquant
+from repro.core.calibration import calibrate
+from repro.serving.engine import Engine
+
+MODES = ["pt_static", "pt_dynamic", "ptoken_dynamic"]
+
+
+def _grid_eval(b, params, modes, smooth: bool, cushion_tune=60):
+    """ppl + acc for each mode x {bare, +cushion}."""
+    out = {}
+    p = params
+    stats = None
+    if smooth:
+        _, stats = calibrate(b.api, params, b.calib_batches(),
+                             QuantConfig(mode="pt_static"))
+        p = apply_smoothquant(params, stats, b.cfg, alpha=0.8)
+    for mode in modes:
+        qcfg = QuantConfig(mode=mode, smoothquant=smooth)
+        scales = b.scales_for(p, qcfg) if mode == "pt_static" else None
+        out[(mode, "bare")] = {"ppl": b.ppl(p, qcfg, scales=scales),
+                               "acc": b.acc(p, qcfg, scales=scales)}
+        # discovery runs with on-the-fly (dynamic) scales — static scales
+        # don't exist until the deployment config is fixed (paper §4.1)
+        disc_q = (QuantConfig(mode="pt_dynamic", smoothquant=qcfg.smoothquant)
+                  if mode == "pt_static" else qcfg)
+        cush = b.cushion_for(p, f"smooth={smooth}", disc_q,
+                             tune_steps=cushion_tune)
+        cscales = (b.scales_for(p, qcfg, cushion=cush)
+                   if mode == "pt_static" else None)
+        out[(mode, "cushion")] = {
+            "ppl": b.ppl(p, qcfg, cushion=cush, scales=cscales),
+            "acc": b.acc(p, qcfg, cushion=cush, scales=cscales)}
+    return out
+
+
+def table1_2_w8a8():
+    """Tables 1+2: W8A8 ppl / accuracy across granularities x smoothquant
+    x ±CushionCache, on the outlier-planted model."""
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    fp_ppl = b.ppl(params, QuantConfig(mode="none"))
+    fp_acc = b.acc(params, QuantConfig(mode="none"))
+    rows = {"fp16": {"ppl": fp_ppl, "acc": fp_acc}}
+    for smooth in [False, True]:
+        grid = _grid_eval(b, params, MODES, smooth)
+        for (mode, var), v in grid.items():
+            tag = f"{'sq+' if smooth else ''}{mode}{'+cc' if var == 'cushion' else ''}"
+            rows[tag] = v
+    dt = time.time() - t0
+    save_json("table1_2.json", {str(k): v for k, v in rows.items()})
+    static_gain = rows["pt_static"]["ppl"] / rows["pt_static+cc"]["ppl"]
+    emit("table1_2_w8a8", dt * 1e6,
+         f"static ppl {rows['pt_static']['ppl']:.2f}->"
+         f"{rows['pt_static+cc']['ppl']:.2f} ({static_gain:.1f}x)")
+    return rows
+
+
+def table3_ablation():
+    """Table 3: component ablation — greedy init / +prefix tuning /
+    +quantization-aware loss (per-tensor dynamic, planted model)."""
+    import copy
+    from repro.configs import CushionConfig
+    from repro.core import cushioncache as CC
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    qcfg = QuantConfig(mode="pt_dynamic")
+    rows = {"fp16": {"acc": b.acc(params, QuantConfig(mode="none"))},
+            "pt_dynamic": {"acc": b.acc(params, qcfg)}}
+
+    greedy = b.cushion_for(params, "ablate", qcfg, skip_tune=True)
+    rows["+greedy_init"] = {"acc": b.acc(params, qcfg, cushion=greedy)}
+
+    ccfg = CushionConfig(tune_steps=60, tune_lr=2e-2, lam=0.0)
+    tr = CC.prefix_tune(b.api, params, greedy, b.tune_iter(), qcfg, ccfg,
+                        verbose=False)
+    rows["+prefix_tuning"] = {"acc": b.acc(params, qcfg, cushion=tr.cushion)}
+
+    ccfg_q = CushionConfig(tune_steps=60, tune_lr=2e-2, lam=0.05)
+    trq = CC.prefix_tune(b.api, params, greedy, b.tune_iter(), qcfg, ccfg_q,
+                         verbose=False)
+    rows["+quant_aware_loss"] = {"acc": b.acc(params, qcfg,
+                                              cushion=trq.cushion)}
+    dt = time.time() - t0
+    save_json("table3.json", rows)
+    emit("table3_ablation", dt * 1e6,
+         f"acc {rows['pt_dynamic']['acc']:.3f}->"
+         f"{rows['+quant_aware_loss']['acc']:.3f}")
+    return rows
+
+
+def table4_lowbit():
+    """Table 4: W6A6 / W4A4 per-token dynamic ± CushionCache."""
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    rows = {}
+    for bits in [6, 4]:
+        qcfg = QuantConfig(mode="ptoken_dynamic", w_bits=bits, a_bits=bits)
+        rows[f"w{bits}a{bits}"] = {"ppl": b.ppl(params, qcfg),
+                                   "acc": b.acc(params, qcfg)}
+        cush = b.cushion_for(params, "lowbit", qcfg)
+        rows[f"w{bits}a{bits}+cc"] = {
+            "ppl": b.ppl(params, qcfg, cushion=cush),
+            "acc": b.acc(params, qcfg, cushion=cush)}
+    dt = time.time() - t0
+    save_json("table4.json", rows)
+    emit("table4_lowbit", dt * 1e6,
+         f"w4a4 ppl {rows['w4a4']['ppl']:.2f}->{rows['w4a4+cc']['ppl']:.2f}")
+    return rows
+
+
+def table5_magnitudes():
+    """Table 5 + Fig 2: activation-magnitude order statistics before/after
+    CushionCache (planted model)."""
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    qn = QuantConfig(mode="none")
+    batch = b.eval_batches(1)[0]
+    before = outliers.last_block_input_stats(b.api, params, batch, qn)
+    cush = b.cushion_for(params, "mag", QuantConfig(mode="pt_dynamic"))
+    after = outliers.last_block_input_stats(b.api, params, batch, qn,
+                                            cushion=cush)
+    per_layer_b = outliers.per_layer_top_stats(b.api, params, batch, qn)
+    per_layer_a = outliers.per_layer_top_stats(b.api, params, batch, qn,
+                                               cushion=cush)
+    dt = time.time() - t0
+    out = {"before": before, "after": after,
+           "per_layer_before": per_layer_b, "per_layer_after": per_layer_a}
+    save_json("table5.json", out)
+    emit("table5_magnitudes", dt * 1e6,
+         f"top1 {before['top1']:.1f}->{after['top1']:.1f} "
+         f"median {before['median']:.3f}->{after['median']:.3f}")
+    return out
+
+
+def table6_walltime():
+    """Table 6: wall-clock of greedy search (step 1) and prefix tuning
+    (step 2)."""
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    b.cushion_for(params, "walltime", QuantConfig(mode="pt_dynamic"))
+    times = [v for k, v in b._search_times.items() if "walltime" in k]
+    dt = time.time() - t0
+    save_json("table6.json", times)
+    t = times[0] if times else {"search_s": 0, "tune_s": 0}
+    emit("table6_walltime", dt * 1e6,
+         f"search {t['search_s']:.1f}s tune {t['tune_s']:.1f}s "
+         f"len={t.get('prefix_len')}")
+    return times
+
+
+def table8_latency():
+    """Table 8: TTFT / TPOT per quantization mode ± CushionCache (CPU
+    timings — relative ordering is the claim, not absolute ms)."""
+    b = get_bench()
+    t0 = time.time()
+    params = b.params
+    batch = {k: v[:2, :64] for k, v in b.eval_batches(1)[0].items()}
+    rows = {}
+    for mode in ["pt_static", "pt_dynamic", "ptoken_dynamic"]:
+        qcfg = QuantConfig(mode=mode)
+        scales = b.scales_for(params, qcfg) if mode == "pt_static" else None
+        disc_q = (QuantConfig(mode="pt_dynamic") if mode == "pt_static"
+                  else qcfg)
+        for cush_tag, cush in [("bare", None),
+                               ("cc", b.cushion_for(params, "lat", disc_q))]:
+            sc = scales
+            if mode == "pt_static" and cush is not None:
+                sc = b.scales_for(params, qcfg, cushion=cush)
+            eng = Engine(b.api, params, qcfg, cushion=cush, scales=sc,
+                         max_seq=256)
+            res = eng.generate(batch, 16)
+            res2 = eng.generate(batch, 16)    # warm
+            rows[f"{mode}+{cush_tag}"] = {"ttft_ms": res2.ttft_ms,
+                                          "tpot_ms": res2.tpot_ms}
+    dt = time.time() - t0
+    save_json("table8.json", rows)
+    base = rows["pt_static+bare"]
+    cc = rows["pt_static+cc"]
+    emit("table8_latency", dt * 1e6,
+         f"static TPOT {base['tpot_ms']:.1f}ms cc {cc['tpot_ms']:.1f}ms")
+    return rows
+
+
+def _quantize_kv_cache(cache, bits=2, group=32):
+    """KIVI stand-in: group-wise asymmetric fake-quant of the KV cache."""
+    def q(a):
+        if a.ndim < 2:
+            return a
+        shp = a.shape
+        d = shp[-1]
+        g = group if d % group == 0 else d
+        ar = a.reshape(*shp[:-1], d // g, g).astype(jnp.float32)
+        mn = jnp.min(ar, axis=-1, keepdims=True)
+        mx = jnp.max(ar, axis=-1, keepdims=True)
+        qmax = 2 ** bits - 1
+        scale = jnp.maximum((mx - mn) / qmax, 1e-8)
+        aq = jnp.round((ar - mn) / scale)
+        return (aq * scale + mn).reshape(shp).astype(a.dtype)
+    return jax.tree_util.tree_map(q, cache)
+
+
+def table9_combos():
+    """Table 9: combination with other quantization methods — AWQ stand-in
+    (weight-only W4 group quant), KIVI stand-in (2-bit KV cache quant)."""
+    from repro.core import quantization as Q
+    b = get_bench()
+    t0 = time.time()
+    params = b.planted()
+    rows = {"fp16": {"ppl": b.ppl(params, QuantConfig(mode="none"))}}
+
+    # AWQ stand-in: W4 group-128 weight-only
+    w4 = QuantConfig(mode="none", w_bits=4, w_group=64)
+    p_w4 = jax.tree_util.tree_map(lambda a: a, params)
+
+    def quant_weights(tree):
+        def visit(d):
+            for k, v in list(d.items()):
+                if isinstance(v, dict):
+                    visit(d[k])
+                elif k.startswith("w") and v.ndim >= 2:
+                    d[k] = Q.weight_fake_quant(
+                        v, QuantConfig(mode="pt_dynamic", w_bits=4,
+                                       w_group=64))
+        visit(tree)
+        return tree
+    p_w4 = quant_weights(p_w4)
+    rows["awq_w4"] = {"ppl": b.ppl(p_w4, QuantConfig(mode="none"))}
+    cush = b.cushion_for(params, "combo", QuantConfig(mode="pt_dynamic"))
+    rows["awq_w4+cc"] = {"ppl": b.ppl(p_w4, QuantConfig(mode="none"),
+                                      cushion=cush)}
+    # AWQ + per-tensor static activations (the paper's "+Per-Cushion Static")
+    qs = QuantConfig(mode="pt_static")
+    rows["awq_w4+static"] = {"ppl": b.ppl(p_w4, qs,
+                                          scales=b.scales_for(p_w4, qs))}
+    rows["awq_w4+static+cc"] = {
+        "ppl": b.ppl(p_w4, qs, cushion=cush,
+                     scales=b.scales_for(p_w4, qs, cushion=cush))}
+
+    # KIVI stand-in: decode with a 2-bit-quantized KV cache ± cushion
+    def kv_acc(cushion):
+        api = b.api
+        batch = {k: v[:4, :48] for k, v in b.eval_batches(1)[0].items()}
+        cache = api.init_cache(4, 96)
+        lg, cache, pos = api.prefill(params, batch, cache,
+                                     QuantConfig(mode="none"),
+                                     cushion=cushion)
+        cache = _quantize_kv_cache(cache, bits=2)
+        correct = tot = 0
+        toks = b.eval_batches(2)[1]["tokens"][:4, 48:64]
+        labs = b.eval_batches(2)[1]["labels"][:4, 48:64]
+        for i in range(8):
+            lg, cache = api.decode_step(params, toks[:, i], pos, cache,
+                                        QuantConfig(mode="none"))
+            pos = pos + 1
+            correct += float(jnp.sum(jnp.argmax(lg, -1) == labs[:, i]))
+            tot += 4
+        return correct / tot
+    rows["kivi2"] = {"acc": kv_acc(None)}
+    rows["kivi2+cc"] = {"acc": kv_acc(cush)}
+    dt = time.time() - t0
+    save_json("table9.json", rows)
+    emit("table9_combos", dt * 1e6,
+         f"awq ppl {rows['awq_w4']['ppl']:.2f} +cc "
+         f"{rows['awq_w4+cc']['ppl']:.2f}")
+    return rows
+
+
+ALL = [table1_2_w8a8, table3_ablation, table4_lowbit, table5_magnitudes,
+       table6_walltime, table8_latency, table9_combos]

@@ -1,0 +1,73 @@
+"""Re-derive roofline terms for existing dry-run records from the archived
+optimized-HLO (results/hlo/*.hlo.gz) — lets the HLO cost model iterate
+without recompiling 64 cells.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze --in results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch.hlo_cost import analyze_hlo
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+
+def tag_of(r) -> str:
+    return (f"{r['arch']}_{r['shape']}_{r['mesh']}_{r.get('quant','none')}"
+            f"_m{r.get('cushion_m',0)}_{r.get('param_shard','fsdp')}"
+            f"{'_pq' if r.get('prequant') else ''}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    args = ap.parse_args()
+    rows = [json.loads(l) for l in open(args.inp)]
+    out = []
+    for r in rows:
+        if not r.get("ok"):
+            out.append(r)
+            continue
+        # records from before tags carried param_shard default to fsdp
+        candidates = [tag_of(r),
+                      f"{r['arch']}_{r['shape']}_{r['mesh']}"
+                      f"_{r.get('quant','none')}_m{r.get('cushion_m',0)}"]
+        path = None
+        for c in candidates:
+            p = os.path.join(args.hlo_dir, c + ".hlo.gz")
+            if os.path.exists(p):
+                path = p
+                break
+        if path is None:
+            out.append(r)
+            continue
+        hlo = gzip.open(path, "rt").read()
+        hc = analyze_hlo(hlo)
+        r["flops_per_chip"] = hc["flops"]
+        r["bytes_per_chip"] = hc["bytes"]
+        r["collective_bytes_per_chip"] = hc["collective_bytes"]
+        r["collective_counts"] = hc["collective_counts"]
+        terms = {"compute_s": hc["flops"] / PEAK_FLOPS_BF16,
+                 "memory_s": hc["bytes"] / HBM_BW,
+                 "collective_s": hc["collective_bytes"] / ICI_BW_PER_LINK}
+        r["terms"] = terms
+        r["dominant"] = max(terms, key=lambda k: terms[k])
+        if r.get("model_flops_per_chip") and hc["flops"]:
+            r["useful_flops_frac"] = r["model_flops_per_chip"] / hc["flops"]
+        out.append(r)
+        print(f"[reanalyze] {tag_of(r)} mem={terms['memory_s']:.3g}s "
+              f"coll={terms['collective_s']:.3g}s", flush=True)
+    with open(args.inp, "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Roofline reporter: reads the dry-run JSONL and emits the §Roofline table
+(terms in seconds, dominant bottleneck, MODEL_FLOPS ratio, one-line fix
+suggestion per cell).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+SUGGEST = {
+    ("compute_s",): "increase per-chip batch or use int8 MXU (2x peak)",
+    ("memory_s",): "cut HBM traffic: Pallas flash attention (keep P in "
+                   "VMEM), fewer microbatches, fused quantized matmul",
+    ("collective_s",): "reshard to cut all-gathers (SP residuals), overlap "
+                       "collectives with compute, int8-compress DP grads",
+}
+
+
+def suggest(dom: str, rec: Dict) -> str:
+    base = SUGGEST.get((dom,), "")
+    if dom == "memory_s" and rec["kind"] == "decode":
+        return "decode is weight/KV-streaming bound: quantize weights+KV " \
+               "(W8A8 halves stream), batch more requests per chip"
+    if dom == "collective_s" and rec.get("collective_counts", {}).get(
+            "all-gather", 0) > 1000:
+        return "per-microbatch FSDP weight all-gathers dominate: larger " \
+               "microbatch + sequence-parallel activations"
+    return base
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep the last record per cell key
+    seen = {}
+    for r in rows:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("quant", "none"), r.get("cushion_m", 0))
+        seen[key] = r
+    return list(seen.values())
+
+
+def fmt_table(rows: List[Dict], mesh: str = "16x16",
+              quant: str = "none") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | model/HLO flops | bottleneck fix |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r.get("arch", ""),
+                                         r.get("shape", ""))):
+        if r.get("mesh") != mesh or r.get("quant", "none") != quant:
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | FAILED: "
+                       f"{r.get('error', '?')[:60]} | | | | | |")
+            continue
+        t = r["terms"]
+        dom = r["dominant"].replace("_s", "")
+        ratio = r.get("useful_flops_frac")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | {dom} | "
+            f"{ratio:.2f} | {suggest(r['dominant'], r)[:70]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--quant", default="none")
+    args = ap.parse_args()
+    rows = load(args.inp)
+    print(fmt_table(rows, args.mesh, args.quant))
+    ok = sum(1 for r in rows if r.get("ok"))
+    print(f"\n{ok}/{len(rows)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

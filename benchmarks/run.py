@@ -1,0 +1,76 @@
+"""Benchmark harness. One function per paper table (1-6, 8, 9) plus kernel
+microbenches. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --only table5_magnitudes
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def kernel_microbench():
+    """Per-call timings of the kernel oracles (CPU; kernel itself targets
+    TPU and is validated in interpret mode by tests)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.kernels import ref as R
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randint(-127, 128, (512, 1024)), jnp.int8)
+    w = jnp.asarray(rng.randint(-127, 128, (1024, 1024)), jnp.int8)
+    f = jax.jit(lambda x, w: R.w8a8_matmul_ref(x, w, jnp.float32(0.01),
+                                               jnp.float32(2.0),
+                                               jnp.float32(0.02)))
+    f(x, w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        f(x, w).block_until_ready()
+    emit("kernel_w8a8_ref_512x1024x1024",
+         (time.perf_counter() - t0) / 10 * 1e6, "int8 matmul oracle")
+
+    q = jnp.asarray(rng.randn(1, 8, 512, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 8, 528, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 8, 528, 64).astype(np.float32))
+    g = jax.jit(lambda q, k, v: R.flash_attention_ref(q, k, v, True, 16))
+    g(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        g(q, k, v).block_until_ready()
+    emit("kernel_flash_ref_B1H8S512", (time.perf_counter() - t0) / 5 * 1e6,
+         "prefix flash oracle")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single table function by name")
+    ap.add_argument("--skip-paper", action="store_true",
+                    help="kernel microbenches only (fast)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    kernel_microbench()
+    if args.skip_paper:
+        return
+    from benchmarks import paper_tables as PT
+    fns = PT.ALL
+    if args.only:
+        fns = [f for f in PT.ALL if f.__name__ == args.only]
+    for fn in fns:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            from benchmarks.common import emit
+            emit(fn.__name__, 0.0, f"ERROR {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

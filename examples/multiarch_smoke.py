@@ -1,0 +1,48 @@
+"""Every assigned architecture, one reduced-config train step + one decode
+step on CPU — demonstrates the uniform model API across families.
+
+    PYTHONPATH=src python examples/multiarch_smoke.py [--arch <id>]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, QuantConfig, get_config, reduced
+from repro.models.registry import build
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCH_IDS
+    qn = QuantConfig(mode="none")
+    rng = jax.random.PRNGKey(0)
+    for arch in archs:
+        t0 = time.time()
+        cfg = reduced(get_config(arch), dtype="float32")
+        api = build(cfg)
+        params = api.init_params(rng)
+        batch = api.make_batch(rng, 2, 32)
+        loss, _ = api.loss_fn(params, batch, qn)
+        # decode one token through the serving path
+        cache = api.init_cache(2, 64)
+        pre = dict(batch)
+        pre["tokens"] = batch["tokens"][:, :8]
+        lg, cache, pos = api.prefill(params, pre, cache, qn)
+        tok = jnp.argmax(lg.reshape(2, -1)[:, -cfg.vocab_size:], -1)
+        lg2, cache = api.decode_step(params, tok.astype(jnp.int32), pos,
+                                     cache, qn)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        print(f"{arch:16s} loss={float(loss):6.3f} params={n:>9,} "
+              f"decode_logits={tuple(lg2.shape)} ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Quickstart: train a tiny LM, discover a CushionCache, and compare
+per-tensor static W8A8 quantization with and without it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CushionConfig, QuantConfig, RunConfig, get_config
+from repro.core import cushioncache as CC
+from repro.core.calibration import calibrate
+from repro.data.pipeline import Pipeline, SyntheticCorpus
+from repro.models.registry import build
+from repro.train.trainer import eval_ppl, make_optimizer, make_train_step
+
+
+def main():
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    pipe = Pipeline(corpus, batch=8, seq_len=128, seed=0)
+
+    # 1. train a small model so activations have structure
+    run = RunConfig(model=cfg, seq_len=128, global_batch=8, lr=2e-3,
+                    train_steps=120, warmup_steps=10)
+    params = api.init_params(jax.random.PRNGKey(0))
+    opt = make_optimizer(run)
+    st = opt.init(params)
+    step = jax.jit(make_train_step(api, run, opt))
+    for i in range(run.train_steps):
+        b = {k: jnp.asarray(v) for k, v in pipe.get_batch(i).items()}
+        params, st, m = step(params, st, b)
+        if i % 40 == 0:
+            print(f"step {i}: loss {float(m['loss']):.3f}")
+
+    evalb = [{k: jnp.asarray(v) for k, v in pipe.get_batch(9000 + i).items()}
+             for i in range(4)]
+    calb = [{k: jnp.asarray(v) for k, v in pipe.get_batch(8000 + i).items()}
+            for i in range(4)]
+
+    # 2. baseline: FP vs per-tensor static W8A8
+    qn, qs = QuantConfig(mode="none"), QuantConfig(mode="pt_static")
+    scales, _ = calibrate(api, params, calb, qs)
+    print(f"FP ppl:            {eval_ppl(api, params, evalb, qn):.3f}")
+    print(f"W8A8 static ppl:   "
+          f"{eval_ppl(api, params, evalb, qs, scales=scales):.3f}")
+
+    # 3. CushionCache: greedy search + quantization-aware prefix tuning
+    ccfg = CushionConfig(max_prefix_len=4, tau=0.98, n_candidates=32,
+                         tune_steps=40, seed_tokens=(1,))
+    def sample_fn(i):
+        b = pipe.get_batch(5000 + i)
+        return {"tokens": jnp.asarray(b["tokens"][:1]),
+                "labels": jnp.asarray(b["labels"][:1])}
+    def tune_iter():
+        i = 0
+        while True:
+            b = pipe.get_batch(6000 + i)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+            i += 1
+    cushion, sr, tr = CC.discover(api, params, sample_fn, tune_iter(),
+                                  QuantConfig(mode="pt_dynamic"), ccfg,
+                                  jax.random.PRNGKey(1), verbose=True)
+    print(f"prefix tokens: {sr.prefix_ids.tolist()}")
+
+    # 4. quantize WITH the cushion (recalibrate for the deployment config)
+    cscales, _ = calibrate(api, params, calb, qs, cushion=cushion)
+    ppl_cc = eval_ppl(api, params, evalb, qs, cushion=cushion,
+                      scales=cscales)
+    print(f"W8A8 static + CushionCache ppl: {ppl_cc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: CushionCache (EMNLP 2024) — production-grade multi-pod JAX
+framework for activation-quantizable LLM training and serving."""
+
+__version__ = "1.0.0"

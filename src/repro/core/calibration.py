@@ -1,0 +1,74 @@
+"""Static-range calibration: run instrumented forwards over a calibration
+set, merge activation statistics, and derive per-site static scales
+(paper §5.1: "for static range quantization, we calibrate using the training
+split").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+
+from repro.configs.base import Family, QuantConfig
+from repro.core import quantization as Q
+
+NON_SITES = ("block_in", "final_in")
+
+
+def _sites_only(tree: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v for k, v in tree.items() if k not in NON_SITES}
+
+
+def taps_to_stats(taps: Dict[str, Any]) -> Dict[str, Any]:
+    """Strip non-site entries from a taps tree, keep {amin, amax, absmax_ch}."""
+    out: Dict[str, Any] = {}
+    if "layers" in taps:
+        out["layers"] = _sites_only(taps["layers"])
+    if "enc_layers" in taps:
+        out["enc_layers"] = _sites_only(taps["enc_layers"])
+    if "head" in taps:
+        out["head"] = taps["head"]
+    def clean(site):
+        return {"amin": site["amin"], "amax": site["amax"],
+                "absmax_ch": site["absmax_ch"]}
+    is_site = lambda d: isinstance(d, dict) and "amin" in d
+    return jax.tree_util.tree_map(clean, out, is_leaf=is_site)
+
+
+def stats_to_scales(stats: Dict[str, Any], qcfg: QuantConfig,
+                    family: Family) -> Dict[str, Any]:
+    """Scales pytree in the layout the model forwards expect:
+      dense-like: {site: SiteScale(L,), ..., "head": SiteScale()}
+      encdec:     {"enc": {...}, "dec": {...}, "head": SiteScale()}
+    """
+    conv = lambda tree: Q.scales_from_stats(tree, qcfg)
+    if family == Family.ENCDEC:
+        out = {"enc": conv(stats["enc_layers"]),
+               "dec": conv(stats["layers"])}
+    else:
+        out = conv(stats["layers"])
+    if "head" in stats:
+        out["head"] = conv({"head": stats["head"]})["head"]
+    return out
+
+
+def calibrate(api, params, batches: Iterable[Dict[str, Any]],
+              qcfg: QuantConfig, cushion=None, n_skip: int = 0
+              ) -> Dict[str, Any]:
+    """Collect stats over `batches` and return the static scales pytree.
+
+    When a cushion is supplied the statistics describe the *cushioned*
+    activation distribution — scales must always be calibrated for the
+    deployment configuration (paper: scales determined for t_{1:n} only).
+    """
+    import dataclasses
+    merged: Optional[Dict[str, Any]] = None
+    # Stats describe the FP model: collection pass runs unquantized compute.
+    obs_cfg = dataclasses.replace(qcfg, mode="none")
+    collect = jax.jit(lambda p, b: api.forward(
+        p, b, obs_cfg, cushion=cushion, collect=True, n_skip=n_skip)[1])
+    for batch in batches:
+        taps = collect(params, batch)
+        merged = Q.merge_stats(merged, taps_to_stats(taps))
+    assert merged is not None, "empty calibration set"
+    return stats_to_scales(merged, qcfg, api.cfg.family), merged

@@ -1,0 +1,226 @@
+"""CushionCache (paper §4): discover a prefix KV cache that mitigates
+activation outliers in subsequent tokens.
+
+Two stages:
+  1. `greedy_search`   — Algorithm 1: grow a hard-token prompt one token at a
+     time, each chosen (over a candidate subset of the embedding table, by
+     batched inference) to minimize L_q(t | p, p'), with early stopping at
+     improvement ratio tau.
+  2. `prefix_tune`     — quantization-aware prefix tuning: freeze the model,
+     train the per-layer cushion (KV / recurrent state) on
+     L = L_pred + lambda * L_q with straight-through quantized forward and
+     stop-grad quantizer parameters (paper eq. 11).
+
+The searched prefix is converted to the deployment artifact with
+`ModelAPI.extract_cushion` (KV for attention archs, recurrent state for
+SSM/hybrid — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CushionConfig, QuantConfig
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# L_q evaluation
+# ---------------------------------------------------------------------------
+
+def make_qerr_fn(api, qcfg: QuantConfig, scales: Optional[Params] = None
+                 ) -> Callable:
+    """Returns jit'd fn(params, prefix_ids (m,), batch) -> L_q of the token
+    part (scales for dynamic modes derived from the token part only —
+    matching deployment, where prefix tokens never re-enter the linears)."""
+
+    def f(params, prefix_ids, batch):
+        m = prefix_ids.shape[0]
+        _, taps = api.forward_with_token_prefix(
+            params, prefix_ids, batch, qcfg, scales=scales, collect=True,
+            n_skip=m, remat=False)
+        return T.total_qerr(taps)
+
+    return jax.jit(f)
+
+
+def make_batched_qerr_fn(api, qcfg: QuantConfig,
+                         scales: Optional[Params] = None) -> Callable:
+    """fn(params, prefixes (N, m), batch) -> (N,) L_q per candidate prefix —
+    the paper's 'batched inference' for the argmin over the embedding table.
+    """
+    def one(params, prefix_ids, batch):
+        m = prefix_ids.shape[0]
+        _, taps = api.forward_with_token_prefix(
+            params, prefix_ids, batch, qcfg, scales=scales, collect=True,
+            n_skip=m, remat=False)
+        return T.total_qerr(taps)
+
+    return jax.jit(jax.vmap(one, in_axes=(None, 0, None)))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: greedy prefix search (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchResult:
+    prefix_ids: np.ndarray
+    history: List[Dict[str, float]]
+    wall_time_s: float
+
+
+def candidate_pool(rng, vocab_size: int, n: int,
+                   seed_tokens: Tuple[int, ...] = ()) -> np.ndarray:
+    """Random subset of the embedding table + always-included nonsemantic
+    candidates (<bos>-like low ids), standing in for the full-table argmin
+    (eq. 9) at CPU scale."""
+    n_rand = max(0, n - 8)
+    cands = jax.random.choice(rng, vocab_size, (n_rand,), replace=False)
+    specials = np.unique(np.array(list(seed_tokens) +
+                                  [0, 1, 2, 3, 10, 13, 32, 198]))
+    specials = specials[specials < vocab_size]
+    return np.unique(np.concatenate([np.asarray(cands), specials]))
+
+
+def greedy_search(api, params, sample_fn: Callable[[int], Dict[str, Any]],
+                  qcfg: QuantConfig, ccfg: CushionConfig, rng,
+                  chunk: int = 16, verbose: bool = True) -> SearchResult:
+    """Algorithm 1. sample_fn(i) -> calibration batch (batch 1, length n).
+
+    Each iteration draws a fresh sample t ~ D, evaluates all candidates
+    p' by batched inference, and appends the argmin if it improves L_q by
+    the factor tau (eq. 10); stops otherwise or at max length.
+    """
+    t0 = time.time()
+    qerr_fn = make_qerr_fn(api, qcfg)
+    batched_fn = make_batched_qerr_fn(api, qcfg)
+    prefix: List[int] = list(ccfg.seed_tokens)
+    history: List[Dict[str, float]] = []
+
+    it = 0
+    while len(prefix) < ccfg.max_prefix_len:
+        rng, k1, k2 = jax.random.split(rng, 3)
+        batch = sample_fn(it)
+        base_ids = jnp.asarray(prefix, jnp.int32)
+        base_err = float(qerr_fn(params, base_ids, batch))
+
+        cands = candidate_pool(k1, api.cfg.vocab_size, ccfg.n_candidates,
+                               ccfg.seed_tokens)
+        best_err, best_tok = np.inf, -1
+        for s in range(0, len(cands), chunk):
+            cs = cands[s:s + chunk]
+            if len(cs) < chunk:   # pad to keep one compiled shape
+                cs = np.concatenate([cs, np.repeat(cs[-1:], chunk - len(cs))])
+            pref = jnp.concatenate(
+                [jnp.broadcast_to(base_ids[None], (chunk, len(prefix))),
+                 jnp.asarray(cs, jnp.int32)[:, None]], axis=1)
+            errs = np.asarray(batched_fn(params, pref, batch))
+            j = int(np.argmin(errs))
+            if errs[j] < best_err:
+                best_err, best_tok = float(errs[j]), int(cs[j])
+
+        history.append({"iter": it, "len": len(prefix), "base_err": base_err,
+                        "best_err": best_err, "best_tok": best_tok,
+                        "ratio": best_err / max(base_err, 1e-30)})
+        if verbose:
+            print(f"[greedy] it={it} len={len(prefix)} L_q={base_err:.4g} "
+                  f"-> {best_err:.4g} (tok={best_tok}, "
+                  f"ratio={best_err / max(base_err, 1e-30):.3f})")
+        if best_err > ccfg.tau * base_err:
+            break                      # eq. (10) early stop
+        prefix.append(best_tok)
+        it += 1
+
+    return SearchResult(prefix_ids=np.asarray(prefix, np.int32),
+                        history=history, wall_time_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: quantization-aware prefix tuning (paper §4.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneResult:
+    cushion: Params
+    log: List[Dict[str, float]]
+    wall_time_s: float
+
+
+def prefix_tune(api, params, cushion0: Params,
+                batch_iter: Iterable[Dict[str, Any]],
+                qcfg: QuantConfig, ccfg: CushionConfig,
+                scales: Optional[Params] = None,
+                verbose: bool = True) -> TuneResult:
+    """Freeze the model; train the cushion on L_pred + lambda*L_q (eq. 11).
+
+    The quantized forward uses straight-through estimation; quantizer
+    scale/zero-points are stop-grad'ed inside the quantizers (fake_quant),
+    matching Jacob et al. QAT practice as cited by the paper.
+    """
+    from repro.optim.adamw import AdamW, constant_lr
+
+    t0 = time.time()
+    opt = AdamW(lr=constant_lr(ccfg.tune_lr), weight_decay=0.0,
+                grad_clip=1.0)
+    state = opt.init(cushion0)
+
+    def loss(cush, batch):
+        l, aux = api.loss_fn(params, batch, qcfg, scales=scales,
+                             cushion=cush, lam=ccfg.lam, remat=False)
+        return l, aux
+
+    @jax.jit
+    def step(cush, state, batch):
+        (l, aux), g = jax.value_and_grad(loss, has_aux=True)(cush, batch)
+        cush, state, om = opt.update(g, state, cush)
+        return cush, state, {"loss": l, "ce": aux["ce"],
+                             "qerr": aux.get("qerr", jnp.zeros(())),
+                             "gnorm": om["grad_norm"]}
+
+    cushion = cushion0
+    log: List[Dict[str, float]] = []
+    for i, batch in enumerate(batch_iter):
+        if i >= ccfg.tune_steps:
+            break
+        cushion, state, m = step(cushion, state, batch)
+        rec = {k: float(v) for k, v in m.items()}
+        rec["step"] = i
+        log.append(rec)
+        if verbose and (i % max(1, ccfg.tune_steps // 10) == 0):
+            print(f"[tune] step={i} loss={rec['loss']:.4f} "
+                  f"ce={rec['ce']:.4f} L_q={rec['qerr']:.4g}")
+    return TuneResult(cushion=cushion, log=log,
+                      wall_time_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipeline
+# ---------------------------------------------------------------------------
+
+def discover(api, params, sample_fn: Callable[[int], Dict[str, Any]],
+             batch_iter: Iterable[Dict[str, Any]], qcfg: QuantConfig,
+             ccfg: CushionConfig, rng, skip_tune: bool = False,
+             verbose: bool = True):
+    """greedy search -> extract KV/state -> quantization-aware tuning.
+    Returns (cushion, SearchResult, TuneResult|None)."""
+    sr = greedy_search(api, params, sample_fn, qcfg, ccfg, rng,
+                       verbose=verbose)
+    prefix_ids = jnp.asarray(sr.prefix_ids, jnp.int32)
+    if prefix_ids.size == 0:
+        prefix_ids = jnp.asarray([0], jnp.int32)
+    cushion = api.extract_cushion(params, prefix_ids, None, qcfg)
+    cushion = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32), cushion)
+    if skip_tune:
+        return cushion, sr, None
+    tr = prefix_tune(api, params, cushion, batch_iter, qcfg, ccfg,
+                     verbose=verbose)
+    return tr.cushion, sr, tr

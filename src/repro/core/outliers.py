@@ -1,0 +1,64 @@
+"""Activation-outlier analysis (paper §6.1, Table 5 / Figure 2): order
+statistics of activation magnitudes — top-1/2/3, top-10%, median — per layer
+and for the input of the last transformer block.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+
+
+def magnitude_stats(x: jax.Array, n_skip: int = 0) -> Dict[str, jax.Array]:
+    """x: (B, S, D) activations -> {top1, top2, top3, top10pct, median}."""
+    if n_skip:
+        x = x[:, n_skip:]
+    mags = jnp.abs(x.astype(jnp.float32)).reshape(-1)
+    k = 3
+    top3 = jax.lax.top_k(mags, k)[0]
+    q90 = jnp.quantile(mags, 0.9)
+    med = jnp.quantile(mags, 0.5)
+    return {"top1": top3[0], "top2": top3[1], "top3": top3[2],
+            "top10pct": q90, "median": med}
+
+
+def last_block_input_stats(api, params, batch, qcfg: QuantConfig,
+                           cushion=None, n_skip: int = 0) -> Dict[str, float]:
+    """Table-5 numbers: magnitude stats of the input to the LAST transformer
+    block, via a forward that returns per-layer block_in taps."""
+    _, taps = api.forward(params, batch, qcfg, cushion=cushion, collect=True,
+                          n_skip=n_skip)
+    bi = taps["layers"]["block_in"]
+    # per-layer (L,) amax; the heavy stats need the tensor itself, so we use
+    # the collected absmax_ch of the last layer for top-1 and channel stats
+    last = jax.tree_util.tree_map(lambda a: a[-1], bi)
+    ch = np.asarray(last["absmax_ch"])
+    ch_sorted = np.sort(ch)[::-1]
+    return {
+        "top1": float(ch_sorted[0]),
+        "top2": float(ch_sorted[1]) if ch.size > 1 else float("nan"),
+        "top3": float(ch_sorted[2]) if ch.size > 2 else float("nan"),
+        "top10pct": float(np.quantile(ch, 0.9)),
+        "median": float(np.quantile(ch, 0.5)),
+    }
+
+
+def per_layer_top_stats(api, params, batch, qcfg: QuantConfig,
+                        cushion=None, n_skip: int = 0):
+    """Figure-2 numbers: per-layer top-1 (channel absmax) and an approximate
+    median across channels of block inputs."""
+    _, taps = api.forward(params, batch, qcfg, cushion=cushion, collect=True,
+                          n_skip=n_skip)
+    bi = taps["layers"]["block_in"]
+    ch = np.asarray(bi["absmax_ch"])        # (L, D)
+    out = []
+    for l in range(ch.shape[0]):
+        row = np.sort(ch[l])[::-1]
+        out.append({"layer": l, "top1": float(row[0]),
+                    "top2": float(row[1]), "top3": float(row[2]),
+                    "median": float(np.quantile(ch[l], 0.5))})
+    return out

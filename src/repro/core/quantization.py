@@ -1,0 +1,344 @@
+"""Quantization core (paper §3).
+
+Implements linear (affine) quantization with the paper's configuration space:
+
+* activations: asymmetric, with three granularities
+    - ``pt_static``      per-tensor, static range (calibrated scales)
+    - ``pt_dynamic``     per-tensor, range computed on the fly
+    - ``ptoken_dynamic`` per-token, range computed on the fly
+* weights: symmetric group-wise (group along the contracting dim)
+
+Two execution paths:
+
+* **fake-quant** (quantize->dequantize in float, straight-through gradients):
+  used for fidelity experiments, calibration, the greedy search and the
+  quantization-aware prefix tuning.
+* **true-int8** (``lax.dot_general`` on int8 with ``preferred_element_type=
+  int32`` and a fused scalar epilogue): the deployment/serving path, also
+  what the Pallas ``w8a8_matmul`` kernel implements on TPU.
+
+All functions are pure; static ranges live in a ``scales`` pytree threaded
+through the model forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Quantization parameters (scale / zero-point), eq. (3)-(4)
+# ---------------------------------------------------------------------------
+
+def qrange(bits: int, symmetric: bool) -> Tuple[int, int]:
+    if symmetric:
+        return -(2 ** (bits - 1) - 1), 2 ** (bits - 1) - 1
+    return 0, 2 ** bits - 1
+
+
+def params_from_minmax(mn: Array, mx: Array, bits: int, symmetric: bool
+                       ) -> Tuple[Array, Array]:
+    """scale, zero_point from observed (min, max). Shapes broadcast."""
+    qmin, qmax = qrange(bits, symmetric)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(mn), jnp.abs(mx))
+        scale = amax / qmax
+        zero = jnp.zeros_like(scale)
+    else:
+        mn = jnp.minimum(mn, 0.0)
+        mx = jnp.maximum(mx, 0.0)
+        scale = (mx - mn) / (qmax - qmin)
+        zero = qmin - mn / jnp.where(scale == 0, 1.0, scale)
+        zero = jnp.round(jnp.clip(zero, qmin, qmax))
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    return scale, zero
+
+
+def quantize(x: Array, scale: Array, zero: Array, bits: int,
+             symmetric: bool) -> Array:
+    qmin, qmax = qrange(bits, symmetric)
+    return jnp.clip(jnp.round(x / scale + zero), qmin, qmax)
+
+
+def dequantize(xq: Array, scale: Array, zero: Array) -> Array:
+    return (xq - zero) * scale
+
+
+def fake_quant(x: Array, scale: Array, zero: Array, bits: int,
+               symmetric: bool) -> Array:
+    """Quantize->dequantize with straight-through gradient (the rounding is
+    invisible to autodiff; scale/zero receive no gradient — the paper's
+    stop-grad on quantizer parameters)."""
+    scale = jax.lax.stop_gradient(scale)
+    zero = jax.lax.stop_gradient(zero)
+    y = dequantize(quantize(x, scale, zero, bits, symmetric), scale, zero)
+    y = y.astype(x.dtype)     # fp32 scales must not promote bf16 activations
+    return x + jax.lax.stop_gradient(y - x)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization per granularity
+# ---------------------------------------------------------------------------
+
+def act_minmax(x: Array, per_token: bool) -> Tuple[Array, Array]:
+    if per_token:
+        mn = jnp.min(x, axis=-1, keepdims=True)
+        mx = jnp.max(x, axis=-1, keepdims=True)
+    else:
+        mn = jnp.min(x)
+        mx = jnp.max(x)
+    return mn, mx
+
+
+def act_fake_quant(x: Array, cfg: QuantConfig,
+                   static_scale: Optional[Array] = None,
+                   static_zero: Optional[Array] = None) -> Array:
+    """Apply the configured activation quantizer (fake-quant path)."""
+    if cfg.mode == "none":
+        return x
+    if cfg.mode == "pt_static":
+        assert static_scale is not None, "static mode needs calibrated scales"
+        return fake_quant(x, static_scale, static_zero, cfg.a_bits,
+                          cfg.symmetric_a)
+    per_token = cfg.mode == "ptoken_dynamic"
+    mn, mx = act_minmax(jax.lax.stop_gradient(x), per_token)
+    scale, zero = params_from_minmax(mn, mx, cfg.a_bits, cfg.symmetric_a)
+    return fake_quant(x, scale, zero, cfg.a_bits, cfg.symmetric_a)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization: symmetric, group-wise along contracting dim
+# ---------------------------------------------------------------------------
+
+def weight_fake_quant(w: Array, cfg: QuantConfig) -> Array:
+    """w: (..., d_in, d_out); groups tile the d_in (contracting) axis."""
+    if cfg.mode == "none" and not cfg.true_int8:
+        return w
+    if cfg.w_bits >= 16:
+        return w
+    d_in = w.shape[-2]
+    g = cfg.w_group if cfg.w_group and d_in % cfg.w_group == 0 else d_in
+    shp = w.shape
+    wg = w.reshape(*shp[:-2], d_in // g, g, shp[-1])
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
+    scale, zero = params_from_minmax(-amax, amax, cfg.w_bits, True)
+    wq = fake_quant(wg, scale, zero, cfg.w_bits, True)
+    return wq.reshape(shp)
+
+
+def weight_quant_int(w: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
+    """True-int path needs a single per-tensor weight scale so the dequant is
+    one scalar multiply in the matmul epilogue (per-tensor static deployment).
+    Returns (w_int8, scale)."""
+    amax = jnp.max(jnp.abs(w))
+    scale, _ = params_from_minmax(-amax, amax, cfg.w_bits, True)
+    wq = quantize(w, scale, jnp.zeros(()), cfg.w_bits, True).astype(jnp.int8)
+    return wq, scale
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SiteScale:
+    """Calibrated static range for one activation site (pytree)."""
+    scale: Array
+    zero: Array
+
+
+jax.tree_util.register_pytree_node(
+    SiteScale,
+    lambda s: ((s.scale, s.zero), None),
+    lambda _, c: SiteScale(*c),
+)
+
+
+def true_int_dot(x: Array, w: Array, cfg: QuantConfig,
+                 site: Optional[SiteScale]) -> Array:
+    """int8 x int8 -> int32 matmul with scalar-epilogue dequant.
+
+    Asymmetric activation zero-point correction:
+      (X_int - z) @ W_int * s_x s_w
+        = (X_int @ W_int) * s_x s_w  -  z * colsum(W_int) * s_x s_w
+    colsum(W_int) is precomputable per weight; here it folds into one rank-1
+    subtract (cheap, fuses).
+    """
+    wq, s_w = weight_quant_int(w, cfg)
+    if cfg.mode == "pt_static":
+        assert site is not None
+        s_x, z_x = site.scale, site.zero
+    else:
+        mn, mx = act_minmax(x, cfg.mode == "ptoken_dynamic")
+        s_x, z_x = params_from_minmax(mn, mx, cfg.a_bits, cfg.symmetric_a)
+    xq = quantize(x, s_x, z_x, cfg.a_bits, cfg.symmetric_a)
+    if not cfg.symmetric_a:
+        # asymmetric range is [0, 2^b-1]; offset by -2^(b-1) to store in
+        # int8 and fold the offset into the zero-point correction
+        off = 2 ** (cfg.a_bits - 1)
+        xq = xq - off
+        z_x = z_x - off
+    xq = xq.astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq, (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    colsum = jnp.sum(wq.astype(jnp.int32), axis=0)
+    acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
+        * colsum.astype(jnp.float32)
+    return (acc * (jnp.asarray(s_x, jnp.float32) * s_w)).astype(x.dtype)
+
+
+def prequantized_int_dot(x: Array, w: Dict[str, Array], cfg: QuantConfig,
+                         site: Optional[SiteScale]) -> Array:
+    """Serving path with int8-resident weights: HBM streams 1 byte/weight
+    (2x less than bf16) straight into the int8 MXU matmul — no on-the-fly
+    weight requantization, no bf16 dequant materialization."""
+    assert cfg.mode == "pt_static" and site is not None
+    s_x, z_x = site.scale, site.zero
+    xq = quantize(x, s_x, z_x, cfg.a_bits, cfg.symmetric_a)
+    if not cfg.symmetric_a:
+        off = 2 ** (cfg.a_bits - 1)
+        xq = xq - off
+        z_x = z_x - off
+    xq = xq.astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, w["w_int"], (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
+        * w["colsum"].astype(jnp.float32)
+    return (acc * (jnp.asarray(s_x, jnp.float32) * w["w_scale"])
+            ).astype(x.dtype)
+
+
+def prequantize(w: Array, cfg: QuantConfig) -> Dict[str, Array]:
+    wq, scale = weight_quant_int(w, cfg)
+    return {"w_int": wq, "w_scale": scale,
+            "colsum": jnp.sum(wq.astype(jnp.int32), axis=0)}
+
+
+_PREQUANT_KEYS = ("wqkv", "wo", "w_up", "w_gate", "w_down", "w_in", "w_out",
+                  "w_proj")
+
+
+def prequantize_tree(params: Any, cfg: QuantConfig,
+                     min_ndim: int = 2) -> Any:
+    """Replace qdot-consumed weight matrices with int8-resident Quantized
+    dicts. Only keys consumed via `qlinear`/`qdot` are converted (MoE /
+    gate projections consumed by raw einsums keep fp); embeddings stay fp
+    (gather lookups)."""
+    def eligible(k, v, path):
+        if not (hasattr(v, "ndim") and v.ndim >= min_ndim):
+            return False
+        if "embed" in path or "moe" in path:
+            return False
+        if k in _PREQUANT_KEYS:
+            return True
+        return k == "w" and path and path[-1] == "head"
+
+    def visit(d, path=()):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                out[k] = visit(v, path + (k,))
+            elif eligible(k, v, path):
+                if v.ndim == 2:
+                    out[k] = prequantize(v, cfg)
+                else:
+                    # stacked over layers: quantize per layer slice
+                    wq, scale = jax.vmap(
+                        lambda a: weight_quant_int(a, cfg))(v)
+                    out[k] = {"w_int": wq, "w_scale": scale,
+                              "colsum": jnp.sum(wq.astype(jnp.int32),
+                                                axis=-2)}
+            else:
+                out[k] = v
+        return out
+    return visit(params)
+
+
+def qdot(x: Array, w: Any, cfg: QuantConfig,
+         site: Optional[SiteScale] = None) -> Array:
+    """Quantized x @ w. ``w`` is (d_in, d_out) / (..., d_in, d_out), or a
+    prequantized {"w_int", "w_scale", "colsum"} dict."""
+    if isinstance(w, dict):
+        return prequantized_int_dot(x, w, cfg, site)
+    if cfg.mode == "none":
+        return x @ w
+    if cfg.true_int8 and w.ndim == 2 and cfg.a_bits == 8 and cfg.w_bits == 8:
+        return true_int_dot(x, w, cfg, site)
+    xq = act_fake_quant(x, cfg,
+                        site.scale if site is not None else None,
+                        site.zero if site is not None else None)
+    wq = weight_fake_quant(w, cfg)
+    return xq @ wq
+
+
+# ---------------------------------------------------------------------------
+# Quantization error L_q, eq. (6), + site statistics for calibration/analysis
+# ---------------------------------------------------------------------------
+
+def site_qerr(x: Array, cfg: QuantConfig, site: Optional[SiteScale],
+              n_skip: int = 0) -> Array:
+    """||X - q(X)||^2 over the token part (positions >= n_skip along axis -2).
+
+    For dynamic modes the scale is derived from the same (token-part) tensor,
+    mirroring deployment; for static mode the calibrated scale is used.
+    """
+    if n_skip:
+        x = x[..., n_skip:, :]
+    # NOTE: qerr stays differentiable w.r.t. x (prefix-tuning needs the
+    # gradient); only the quantizer parameters are stop-grad'ed below.
+    if cfg.mode == "pt_static" and site is not None:
+        scale, zero = site.scale, site.zero
+    else:
+        per_token = cfg.mode == "ptoken_dynamic"
+        mn, mx = act_minmax(jax.lax.stop_gradient(x), per_token)
+        scale, zero = params_from_minmax(mn, mx, cfg.a_bits, cfg.symmetric_a)
+    scale = jax.lax.stop_gradient(scale)
+    zero = jax.lax.stop_gradient(zero)
+    xq = dequantize(quantize(x, scale, zero, cfg.a_bits, cfg.symmetric_a),
+                    scale, zero)
+    return jnp.sum(jnp.square((x - xq).astype(jnp.float32)))
+
+
+def site_stats(x: Array, n_skip: int = 0) -> Dict[str, Array]:
+    """Reduced statistics for calibration & Table-5-style analysis."""
+    if n_skip:
+        x = x[..., n_skip:, :]
+    xf = x.astype(jnp.float32)
+    return {
+        "amin": jnp.min(xf),
+        "amax": jnp.max(xf),
+        "absmax_ch": jnp.max(jnp.abs(xf), axis=tuple(range(x.ndim - 1))),
+    }
+
+
+def scales_from_stats(stats: Any, cfg: QuantConfig) -> Any:
+    """Turn a pytree of {amin, amax, absmax_ch} leaves (one dict per site)
+    into a pytree of SiteScale for pt_static deployment."""
+    def one(site: Dict[str, Array]) -> SiteScale:
+        scale, zero = params_from_minmax(site["amin"], site["amax"],
+                                         cfg.a_bits, cfg.symmetric_a)
+        return SiteScale(scale=scale, zero=zero)
+    is_site = lambda d: isinstance(d, dict) and "amin" in d
+    return jax.tree_util.tree_map(one, stats, is_leaf=is_site)
+
+
+def merge_stats(a: Any, b: Any) -> Any:
+    """Running union of two stats pytrees (min of mins, max of maxes)."""
+    if a is None:
+        return b
+
+    def one(sa, sb):
+        return {"amin": jnp.minimum(sa["amin"], sb["amin"]),
+                "amax": jnp.maximum(sa["amax"], sb["amax"]),
+                "absmax_ch": jnp.maximum(sa["absmax_ch"], sb["absmax_ch"])}
+    is_site = lambda d: isinstance(d, dict) and "amin" in d
+    return jax.tree_util.tree_map(one, a, b, is_leaf=is_site)

@@ -1,0 +1,123 @@
+"""SmoothQuant (Xiao et al. 2023) reparameterization: migrate activation
+magnitude into the weights with per-channel factors
+
+    s_j = max|X_j|^alpha / max|W_j|^(1-alpha)
+
+so activations become flatter (easier to quantize per-tensor) while weights
+absorb the outliers. The paper combines CushionCache with SmoothQuant-O1/2/3
+(per-token / per-tensor-dynamic / per-tensor-static respectively — the O*
+level is just the activation quantizer granularity, which we configure via
+QuantConfig.mode).
+
+Folding map (dense/llama-style blocks, the paper's models):
+  site "qkv"    -> ln1.g    /= s,  wqkv rows    *= s
+  site "mlp_in" -> ln2.g    /= s,  w_up/gate rows *= s
+  site "down"   -> w_up cols /= s, w_down rows  *= s   (gated: h = silu(g)*up)
+  site "o"      -> wqkv v-cols /= s (GQA-reduced), wo rows *= s
+
+MoE expert weights fold identically with an extra leading expert axis.
+Sites on recurrent mixers (mamba/xlstm) have no exact fold through the
+nonlinearity and are left unsmoothed (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Family, ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _factors(act_absmax_ch: jax.Array, w_absmax_ch: jax.Array,
+             alpha: float) -> jax.Array:
+    a = jnp.maximum(act_absmax_ch.astype(jnp.float32), 1e-5)
+    w = jnp.maximum(w_absmax_ch.astype(jnp.float32), 1e-5)
+    s = a ** alpha / w ** (1.0 - alpha)
+    return jnp.clip(s, 1e-2, 1e4)
+
+
+def _w_absmax_in(w: jax.Array) -> jax.Array:
+    """Per-input-channel |W| max; w: (..., d_in, d_out) -> (d_in,)."""
+    red = tuple(range(w.ndim - 2)) + (w.ndim - 1,)
+    return jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red)
+
+
+def smooth_dense_layer(lp: Params, lstats: Dict[str, Any], cfg: ModelConfig,
+                       alpha: float) -> Params:
+    """Smooth one dense transformer layer. lp/lstats are single-layer
+    (unstacked) pytrees; returns the updated layer params."""
+    lp = jax.tree_util.tree_map(lambda a: a, lp)  # shallow copy
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = lp["attn"]["wqkv"].dtype
+
+    # qkv <- ln1
+    s = _factors(lstats["qkv"]["absmax_ch"], _w_absmax_in(lp["attn"]["wqkv"]),
+                 alpha)
+    lp["ln1"] = dict(lp["ln1"])
+    lp["attn"] = dict(lp["attn"])
+    lp["ln1"]["g"] = (lp["ln1"]["g"] / s.astype(dt))
+    if "b" in lp["ln1"]:
+        lp["ln1"]["b"] = lp["ln1"]["b"] / s.astype(dt)
+    lp["attn"]["wqkv"] = lp["attn"]["wqkv"] * s[:, None].astype(dt)
+
+    # o <- v columns of wqkv (GQA: o-input (H*hd) reduces to v channels (K*hd))
+    so_full = lstats["o"]["absmax_ch"]                    # (H*hd,)
+    so_v = jnp.max(so_full.reshape(K, H // K, hd), axis=1).reshape(K * hd)
+    s = _factors(so_v, _w_absmax_in(lp["attn"]["wo"]).reshape(
+        K, H // K, hd).max(axis=1).reshape(K * hd), alpha)
+    vcols = lp["attn"]["wqkv"][:, (H + K) * hd:]
+    lp["attn"]["wqkv"] = lp["attn"]["wqkv"].at[:, (H + K) * hd:].set(
+        vcols / s.astype(dt))
+    if "bqkv" in lp["attn"]:
+        b = lp["attn"]["bqkv"]
+        lp["attn"]["bqkv"] = b.at[(H + K) * hd:].set(
+            b[(H + K) * hd:] / s.astype(dt))
+    s_o = jnp.tile(s.reshape(K, 1, hd), (1, H // K, 1)).reshape(H * hd)
+    lp["attn"]["wo"] = lp["attn"]["wo"] * s_o[:, None].astype(dt)
+
+    # mlp_in <- ln2
+    mlp = dict(lp["mlp"])
+    s = _factors(lstats["mlp_in"]["absmax_ch"], _w_absmax_in(mlp["w_up"]),
+                 alpha)
+    lp["ln2"] = dict(lp["ln2"])
+    lp["ln2"]["g"] = lp["ln2"]["g"] / s.astype(dt)
+    if "b" in lp["ln2"]:
+        lp["ln2"]["b"] = lp["ln2"]["b"] / s.astype(dt)
+    mlp["w_up"] = mlp["w_up"] * s[:, None].astype(dt)
+    if "w_gate" in mlp:
+        mlp["w_gate"] = mlp["w_gate"] * s[:, None].astype(dt)
+
+    # down <- w_up output columns
+    s = _factors(lstats["down"]["absmax_ch"], _w_absmax_in(mlp["w_down"]),
+                 alpha)
+    mlp["w_up"] = mlp["w_up"] / s[None, :].astype(dt)
+    mlp["w_down"] = mlp["w_down"] * s[:, None].astype(dt)
+    lp["mlp"] = mlp
+    return lp
+
+
+def apply_smoothquant(params: Params, stats: Dict[str, Any],
+                      cfg: ModelConfig, alpha: float = 0.8) -> Params:
+    """Smooth all layers. `stats` is the merged calibration stats tree
+    (leaves stacked (L, ...) over layers). Supported: DENSE/VLM fully;
+    other families: the attention/mlp sites where present."""
+    if cfg.family not in (Family.DENSE, Family.VLM):
+        raise NotImplementedError(
+            f"SmoothQuant folding implemented for dense-family archs; "
+            f"{cfg.family} mixers have no exact fold (see DESIGN.md)")
+    L = cfg.n_layers
+    lstats = stats["layers"]
+
+    def one(i):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        ls = jax.tree_util.tree_map(lambda a: a[i], lstats)
+        return smooth_dense_layer(lp, ls, cfg, alpha)
+
+    smoothed = [one(i) for i in range(L)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *smoothed)
+    out = dict(params)
+    out["layers"] = stacked
+    return out

@@ -1,0 +1,178 @@
+"""Partition-rule engine and sharding helpers.
+
+Sharding strategy (see DESIGN.md §4):
+
+* weights: FSDP-style 2-D — tensor-parallel dims (heads*d_head, d_ff,
+  experts) on ``model``; d_model on ``data``. Replicated across ``pod``
+  (pure DP over DCN between pods).
+* activations: batch on ``(pod, data)``; head / feature dims on ``model``.
+* optimizer state inherits the param specs (ZeRO-1).
+
+Rules are (regex, PartitionSpec-template) pairs matched against the
+"/"-joined param path; templates use axis *roles* ("B", "D", "M", None)
+resolved against the active mesh (so the same rules serve the single-pod
+(data, model) and multi-pod (pod, data, model) meshes).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = \
+    contextvars.ContextVar("repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for `constrain` hints inside model code."""
+    tok = _ACTIVE_MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _ACTIVE_MESH.reset(tok)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def _resolve_role(role, mesh: Mesh):
+    """Map an axis role to concrete mesh axis name(s)."""
+    names = mesh.axis_names
+    if role is None:
+        return None
+    if role == "B":                      # batch: all pure-data axes
+        return ("pod", "data") if "pod" in names else "data"
+    if role == "D":                      # fsdp: data axis only
+        return "data"
+    if role == "M":                      # tensor parallel
+        return "model"
+    return role
+
+
+def spec(*roles) -> Tuple[Any, ...]:
+    return tuple(roles)
+
+
+def to_pspec(roles: Sequence[Any], mesh: Mesh) -> P:
+    return P(*[_resolve_role(r, mesh) for r in roles])
+
+
+def constrain(x: jax.Array, *roles) -> jax.Array:
+    """Sharding hint; no-op when no mesh is active (CPU tests)."""
+    mesh = _ACTIVE_MESH.get()
+    if mesh is None or mesh.size == 1:
+        return x
+    if len(roles) < x.ndim:
+        roles = tuple(roles) + (None,) * (x.ndim - len(roles))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, to_pspec(roles, mesh)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+
+# (regex over "/".join(path), role template). First match wins. Templates are
+# aligned to the *trailing* dims of the array (leading dims — e.g. the stacked
+# layer axis from scan — are unsharded).
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # embeddings: vocab on model, d_model on data
+    (r"(^|/)embed(/w)?$", ("M", "D")),
+    (r"(^|/)(lm_)?head(/w)?$", ("D", "M")),
+    (r"pos_embed", (None, "D")),
+    # attention
+    (r"attn/wqkv$", ("D", "M")),
+    (r"attn/bqkv$", ("M",)),
+    (r"attn/wo$", ("M", "D")),
+    # dense / residual MLP
+    (r"mlp/w_(gate|up)$", ("D", "M")),
+    (r"mlp/w_down$", ("M", "D")),
+    # MoE: experts on model, then (d_in, d_out) on (data, -)
+    (r"moe/w_(gate|up)$", ("M", "D", None)),
+    (r"moe/w_down$", ("M", None, "D")),
+    (r"moe/router$", ("D", None)),
+    # mamba
+    (r"mamba/w_in$", ("D", "M")),
+    (r"mamba/w_out$", ("M", "D")),
+    (r"mamba/(w_x|conv_w|A_log|D|dt_)", ("M",)),
+    # xlstm
+    (r"xlstm/w_(qkv|if|o)$", ("D", "M")),
+    (r"xlstm/w_proj$", ("M", "D")),
+    # norms / scalars: replicated
+    (r".*", ()),
+)
+
+
+def serve_rules() -> Tuple[Tuple[str, Tuple[Any, ...]], ...]:
+    """Inference partition rules: TP-only (weights replicated across the
+    data/pod axes). FSDP ("D"-role) sharding is a *training* memory
+    optimization; at decode it forces a per-token all-gather of every
+    weight (see EXPERIMENTS.md §Perf, jamba decode iteration)."""
+    return tuple((rx, tuple(None if r == "D" else r for r in roles))
+                 for rx, roles in DEFAULT_RULES)
+
+
+def rules_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                rules=DEFAULT_RULES) -> P:
+    # int8-resident (prequantized) weights keep the parent weight's rules
+    path = re.sub(r"/w_int$", "", path)
+    for rx, roles in rules:
+        if re.search(rx, path):
+            pads = (None,) * (len(shape) - len(roles))
+            full = pads + tuple(_resolve_role(r, mesh) for r in roles)
+            # drop shardings that don't divide (GSPMD would pad params; for
+            # params we prefer exact or replicated on that dim)
+            fixed = []
+            for dim, ax in zip(shape, full):
+                if ax is None:
+                    fixed.append(None)
+                    continue
+                size = np.prod([mesh.shape[a] for a in
+                                (ax if isinstance(ax, tuple) else (ax,))])
+                fixed.append(ax if dim % int(size) == 0 else None)
+            return P(*fixed)
+    return P()
+
+
+def tree_paths(tree: Any) -> Any:
+    """Pytree of "/"-joined key paths, same structure as `tree`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def keystr(kp):
+        parts = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+    return jax.tree_util.tree_unflatten(treedef, [keystr(kp) for kp, _ in flat])
+
+
+def params_shardings(params_shape: Any, mesh: Mesh, rules=DEFAULT_RULES) -> Any:
+    """NamedShardings for a (possibly abstract) param pytree."""
+    paths = tree_paths(params_shape)
+    return jax.tree_util.tree_map(
+        lambda p, x: NamedSharding(mesh, rules_pspec(p, x.shape, mesh, rules)),
+        paths, params_shape)
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> NamedSharding:
+    """Leading-axis batch sharding for data batches."""
+    roles = ("B",) + (None,) * (ndim - 1)
+    if not batch_divisible:
+        roles = (None,) * ndim
+    return NamedSharding(mesh, to_pspec(roles, mesh))

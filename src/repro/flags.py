@@ -1,0 +1,11 @@
+"""Runtime switches for perf-iteration A/B comparisons (env-controlled so a
+fresh process can lower the *pre-optimization* behaviour for honest
+baselines; see EXPERIMENTS.md §Perf).
+"""
+import os
+
+# chunkwise mLSTM chunk length; 0 disables chunking (quadratic parallel form)
+MLSTM_CHUNK = int(os.environ.get("REPRO_MLSTM_CHUNK", "256"))
+
+# decode attention: keep KV-sequence axis sharded (split-KV / flash-decoding)
+DECODE_SPLIT_KV = os.environ.get("REPRO_SPLIT_KV", "1") != "0"

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused asymmetric activation quantization.
+
+Static path: one pass — x/s + z, round, clip, emit int8 (the per-tensor
+static deployment path; scale/zero are calibration constants, so the kernel
+is purely elementwise and fuses into the matmul pipeline's producer side).
+
+Per-token path: row-wise min/max reduction and quantize in one VMEM pass —
+a row fits comfortably in VMEM for every assigned d_model (≤ 8192 fp32 =
+32 KB/row).
+
+Output int8 is offset by -128 (symmetric storage) so the downstream int8
+MXU matmul consumes it directly; the matching zero-point shift is folded
+into the correction term by the caller (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _static_kernel(x_ref, s_ref, z_ref, o_ref, *, qmax: int):
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s_ref[0] + z_ref[0]), 0, qmax) - 128
+    o_ref[...] = q.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant_static(x: jax.Array, scale, zero, bits: int = 8,
+                     bm: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (M, D) -> int8 (M, D) with precomputed per-tensor scale/zero."""
+    M, D = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0
+    qmax = 2 ** bits - 1
+    s = jnp.asarray(scale, jnp.float32).reshape(1)
+    z = jnp.asarray(zero, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_static_kernel, qmax=qmax),
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, D), jnp.int8),
+        interpret=interpret,
+    )(x, s, z)
+
+
+def _ptoken_kernel(x_ref, o_ref, s_ref, z_ref, *, qmax: int):
+    x = x_ref[...].astype(jnp.float32)
+    mn = jnp.minimum(jnp.min(x, axis=-1, keepdims=True), 0.0)
+    mx = jnp.maximum(jnp.max(x, axis=-1, keepdims=True), 0.0)
+    scale = jnp.maximum((mx - mn) / qmax, 1e-8)
+    zero = jnp.round(jnp.clip(-mn / scale, 0, qmax))
+    q = jnp.clip(jnp.round(x / scale + zero), 0, qmax) - 128
+    o_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    z_ref[...] = zero
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant_ptoken(x: jax.Array, bits: int = 8, bm: int = 256,
+                     interpret: bool = False):
+    """x: (M, D) -> (int8 (M,D), scale (M,1), zero (M,1)) per-token."""
+    M, D = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0
+    qmax = 2 ** bits - 1
+    out, s, z = pl.pallas_call(
+        functools.partial(_ptoken_kernel, qmax=qmax),
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, D), jnp.int8),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return out, s, z

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash attention with a CushionCache prefix block.
+
+Online-softmax tiling: grid = (batch*heads, S/bq); each program streams KV
+tiles HBM->VMEM, keeping the probability tile entirely in VMEM — this is the
+fix for the dominant HBM term the dry-run roofline exposes in the pure-jnp
+path (attention-probability materialization).
+
+Cushion prefix: keys/values are laid out [prefix | content]; a query at
+content position i may attend every j < prefix_len (the sink block — NO
+causal masking against the prefix, paper §4/eq. 8) plus content positions
+j <= i. Masking is computed from absolute tile indices, so the prefix block
+costs one extra KV tile, not a second kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bkv: int, n_kv: int, prefix_len: int, causal: bool,
+            scale: float, T: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    kj = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    valid = kj < T
+    if causal:
+        valid &= (kj < prefix_len) | (kj <= qi + prefix_len)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefix_len", "bq",
+                                             "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, prefix_len: int = 0,
+                    bq: int = 256, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,H,T,hd). Returns (B,H,S,hd).
+
+    VMEM working set: q/k/v/p tiles + fp32 accumulator
+      bq*hd + 2*bkv*hd + bq*bkv + bq*hd(fp32) ≈ 1.1 MB at (256, 512, 128).
+    """
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bkv = min(bkv, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bkv) * bkv
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    n_kv = Tp // bkv
+    qf = q.reshape(B * H, Sp, hd)
+    kf = k.reshape(B * H, Tp, hd)
+    vf = v.reshape(B * H, Tp, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bkv=bkv, n_kv=n_kv,
+                          prefix_len=prefix_len, causal=causal, scale=scale,
+                          T=T),
+        grid=(B * H, Sp // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sp, hd)[:, :, :S]

@@ -1,0 +1,77 @@
+"""jit'd wrappers routing model-level ops through the Pallas kernels
+(TPU execution path; `interpret=True` everywhere on CPU for validation).
+
+`qdot_pallas` is the drop-in for core.quantization.true_int_dot when
+ParallelConfig.use_pallas is set: fused act-quant kernel -> int8 MXU matmul
+kernel with the static-scale epilogue. `attention_pallas` replaces the jnp
+flash path (it expects GQA-expanded heads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import quantization as Q
+from repro.kernels.act_quant import act_quant_ptoken, act_quant_static
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.w8a8_matmul import w8a8_matmul
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+def qdot_pallas(x: jax.Array, w: jax.Array, cfg: QuantConfig,
+                site: Optional[Q.SiteScale] = None,
+                interpret: bool = True) -> jax.Array:
+    """x: (..., K) fp; w: (K, N) fp. Full W8A8 per-tensor-static path on the
+    Pallas kernels: quantize activations (fused kernel), quantize weights
+    (host-side constant fold under jit), int8 matmul with scalar epilogue.
+
+    The int8 storage is offset by -128 in act_quant; the equivalent
+    zero-point seen by the matmul is z - 128.
+    """
+    assert cfg.mode == "pt_static" and site is not None
+    orig_shape = x.shape
+    M = 1
+    for d in orig_shape[:-1]:
+        M *= d
+    K = orig_shape[-1]
+    x2 = x.reshape(M, K)
+    x2, M0 = _pad_to(x2, 128, 0)
+
+    wq, s_w = Q.weight_quant_int(w, cfg)
+    xq = act_quant_static(x2, site.scale, site.zero, bits=cfg.a_bits,
+                          bm=min(128, x2.shape[0]), interpret=interpret)
+    out = w8a8_matmul(xq, wq, site.scale, site.zero - 128.0, s_w,
+                      bm=min(128, xq.shape[0]), bn=min(512, w.shape[1]),
+                      bk=min(256, K), interpret=interpret)
+    out = out[:M0].reshape(*orig_shape[:-1], w.shape[1])
+    return out.astype(x.dtype)
+
+
+def attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool = True, prefix_len: int = 0,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,T,Kh,hd) GQA -> expand kv heads, run the
+    flash kernel, return (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    kh = jnp.repeat(jnp.transpose(k, (0, 2, 1, 3)), G, axis=1)
+    vh = jnp.repeat(jnp.transpose(v, (0, 2, 1, 3)), G, axis=1)
+    o = flash_attention(qh, kh, vh, causal=causal, prefix_len=prefix_len,
+                        bq=min(256, S), bkv=min(512, T),
+                        interpret=interpret)
+    return jnp.transpose(o, (0, 2, 1, 3))

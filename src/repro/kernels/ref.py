@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def w8a8_matmul_ref(x_int: jax.Array, w_int: jax.Array, s_x: jax.Array,
+                    z_x: jax.Array, s_w: jax.Array) -> jax.Array:
+    """(X_int - z_x) @ W_int * s_x*s_w  in fp32. x_int: (M,K) int8,
+    w_int: (K,N) int8, scalars fp32."""
+    acc = jax.lax.dot_general(
+        x_int, w_int, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    colsum = jnp.sum(w_int.astype(jnp.int32), axis=0).astype(jnp.float32)
+    acc = acc - z_x * colsum[None, :]
+    return acc * (s_x * s_w)
+
+
+def act_quant_ref(x: jax.Array, bits: int = 8, per_token: bool = False):
+    """Asymmetric quantize; returns (x_int8, scale, zero). Static path takes
+    precomputed scale/zero via act_quant_static_ref."""
+    qmax = 2 ** bits - 1
+    if per_token:
+        mn = jnp.min(x, axis=-1, keepdims=True)
+        mx = jnp.max(x, axis=-1, keepdims=True)
+    else:
+        mn = jnp.min(x)
+        mx = jnp.max(x)
+    mn = jnp.minimum(mn, 0.0)
+    mx = jnp.maximum(mx, 0.0)
+    scale = jnp.maximum((mx - mn) / qmax, 1e-8)
+    zero = jnp.round(jnp.clip(-mn / scale, 0, qmax))
+    xq = jnp.clip(jnp.round(x / scale + zero), 0, qmax) - 128
+    return xq.astype(jnp.int8), scale, zero
+
+
+def act_quant_static_ref(x: jax.Array, scale: jax.Array, zero: jax.Array,
+                         bits: int = 8) -> jax.Array:
+    qmax = 2 ** bits - 1
+    xq = jnp.clip(jnp.round(x / scale + zero), 0, qmax) - 128
+    return xq.astype(jnp.int8)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, prefix_len: int = 0
+                        ) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,H,T,hd); T = prefix_len + S when causal.
+    Prefix positions fully visible (the CushionCache block)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(T)[None, :]
+        mask = (j < prefix_len) | (j <= i + prefix_len)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

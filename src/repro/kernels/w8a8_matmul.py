@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: W8A8 per-tensor-static matmul.
+
+int8 x int8 tiles stream HBM->VMEM, accumulate on the MXU in int32, and the
+epilogue applies the single fused scalar dequant s_x*s_w plus the asymmetric
+zero-point correction  -z_x * colsum(W)  — the whole point of per-tensor
+*static* quantization: no per-channel/per-token scale traffic anywhere near
+the contracting dimension (DESIGN.md §3), and int8 doubles MXU throughput.
+
+Block shapes default to (256, 512, 256): MXU-aligned (multiples of 128);
+VMEM working set = bm*bk + bk*bn + bm*bn*4B ≈ 0.85 MB « 16 MB VMEM, leaving
+room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, colsum_ref, scale_ref, zx_ref, o_ref, acc_ref, *,
+            n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        # zero-point correction: (X - z)W = XW - z * colsum(W)
+        acc = acc - zx_ref[0] * colsum_ref[...][None, :].astype(jnp.float32)
+        o_ref[...] = acc * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
+                bm: int = 256, bn: int = 512, bk: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """x_int: (M,K) int8; w_int: (K,N) int8; s_x/z_x/s_w scalar fp32.
+    Returns fp32 (M,N) = (x - z_x) @ w * s_x * s_w."""
+    M, K = x_int.shape
+    K2, N = w_int.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"shapes ({M},{K},{N}) must tile by ({bm},{bk},{bn})"
+    n_k = K // bk
+    colsum = jnp.sum(w_int.astype(jnp.int32), axis=0)   # (N,), tiny
+    scale = (jnp.asarray(s_x, jnp.float32)
+             * jnp.asarray(s_w, jnp.float32)).reshape(1)
+    zx = jnp.asarray(z_x, jnp.float32).reshape(1)
+
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_int, w_int, colsum, scale, zx)

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and record memory/cost/collective analysis for §Dry-run and
+§Roofline. No real allocation happens — inputs are ShapeDtypeStructs.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k \
+      [--multipod] [--quant pt_static] [--cushion 16] [--out results.jsonl]
+  python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, QuantConfig, RunConfig,  # noqa: E402
+                           cell_is_applicable, get_config)
+from repro.distributed import sharding as SH                # noqa: E402
+from repro.distributed.collectives import collective_bytes_of_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models.registry import build                     # noqa: E402
+from repro.optim.adamw import AdamW, cosine_lr              # noqa: E402
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+
+def tuple_leaf(x):
+    return isinstance(x, tuple)
+
+
+def cache_shardings(api, cache_abstract, mesh):
+    roles = api.mod.cache_roles(api.cfg)
+
+    def one(role_t, leaf):
+        spec = SH.rules_pspec("", leaf.shape, mesh, rules=())
+        # resolve roles; drop axes that don't divide the dim
+        resolved = []
+        for dim, r in zip(leaf.shape, role_t):
+            ax = SH._resolve_role(r, mesh)
+            if ax is None:
+                resolved.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in
+                                (ax if isinstance(ax, tuple) else (ax,))]))
+            resolved.append(ax if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*resolved))
+
+    return jax.tree_util.tree_map(one, roles, cache_abstract,
+                                  is_leaf=tuple_leaf)
+
+
+def batch_shardings(mesh, specs):
+    def one(s):
+        bax = SH._resolve_role("B", mesh)
+        n = int(np.prod([mesh.shape[a] for a in
+                         (bax if isinstance(bax, tuple) else (bax,))]))
+        first = bax if s.shape and s.shape[0] % n == 0 else None
+        return NamedSharding(mesh, P(first, *([None] * (len(s.shape) - 1))))
+    return jax.tree_util.tree_map(one, specs)
+
+
+def abstract_params(api):
+    return jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quant: str = "none", cushion_m: int = 0,
+               microbatch_policy: str = "auto",
+               param_shard: str = "fsdp", prequant: bool = False):
+    cfg = get_config(arch)
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shp = SHAPES[shape_name]
+    kind = shp["kind"]
+    B, S = shp["global_batch"], shp["seq_len"]
+    qcfg = QuantConfig(mode=quant, true_int8=(quant == "pt_static"))
+    cushion = None
+    if cushion_m:
+        cushion = api.cushion_zeros(cushion_m, dtype=jnp.float32)
+    scales = (api.mod.placeholder_all_scales(cfg)
+              if quant != "none" else None)
+
+    p_abs = abstract_params(api)
+    if prequant and kind != "train":
+        # int8-resident serving weights (attention + dense-MLP matrices)
+        from repro.core.quantization import prequantize_tree
+        p_abs = jax.eval_shape(
+            lambda p: prequantize_tree(p, qcfg), p_abs)
+    rules = SH.serve_rules() if (param_shard == "tp" and kind != "train") \
+        else SH.DEFAULT_RULES
+    p_sh = SH.params_shardings(p_abs, mesh, rules=rules)
+    n_b = int(np.prod([mesh.shape[a] for a in
+                       (("pod", "data") if multi_pod else ("data",))]))
+
+    with SH.use_mesh(mesh):
+        if kind == "train":
+            run = RunConfig(model=cfg, quant=qcfg, seq_len=S, global_batch=B)
+            opt = AdamW(lr=cosine_lr(3e-4, 100, 1000))
+            o_abs = jax.eval_shape(opt.init, p_abs)
+            o_sh = jax.tree_util.tree_map(
+                lambda _: None, o_abs)  # placeholder, built below
+            from repro.optim.adamw import AdamWState
+            o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                              mu=SH.params_shardings(o_abs.mu, mesh),
+                              nu=SH.params_shardings(o_abs.nu, mesh))
+            if microbatch_policy == "auto":
+                microbatches = max(1, B // n_b)   # per-device microbatch 1
+            else:
+                microbatches = int(microbatch_policy)
+            from repro.train.trainer import make_train_step
+            step_fn = make_train_step(api, run, opt,
+                                      microbatches=microbatches,
+                                      cushion=cushion)
+            b_specs = api.input_specs(B, S)
+            b_sh = batch_shardings(mesh, b_specs)
+            fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_abs, o_abs, b_specs)
+        elif kind == "prefill":
+            c_abs = jax.eval_shape(lambda: api.init_cache(B, S + cushion_m))
+            c_sh = cache_shardings(api, c_abs, mesh)
+            b_specs = api.input_specs(B, S)
+            b_specs.pop("labels", None)
+            b_sh = batch_shardings(mesh, b_specs)
+
+            def prefill_fn(params, batch, cache):
+                return api.prefill(params, batch, cache, qcfg,
+                                   cushion=cushion, scales=scales)
+            fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(p_abs, b_specs, c_abs)
+        else:  # decode
+            c_abs = jax.eval_shape(lambda: api.init_cache(B, S + cushion_m))
+            c_sh = cache_shardings(api, c_abs, mesh)
+            tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+            tok_sh = batch_shardings(mesh, {"t": tok})["t"]
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def decode_fn(params, token, pos, cache):
+                return api.decode_step(params, token, pos, cache, qcfg,
+                                       scales=scales)
+            fn = jax.jit(decode_fn,
+                         in_shardings=(p_sh, tok_sh,
+                                       NamedSharding(mesh, P()), c_sh),
+                         donate_argnums=(3,))
+            lowered = fn.lower(p_abs, tok, pos, c_abs)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    record = analyze(compiled, arch, shape_name, multi_pod, kind, quant,
+                     cushion_m, cfg, B, S, mesh, param_shard, prequant)
+    record["compile_s"] = round(compile_s, 1)
+    record["param_shard"] = param_shard
+    record["prequant"] = prequant
+    return record
+
+
+def analyze(compiled, arch, shape_name, multi_pod, kind, quant, cushion_m,
+            cfg, B, S, mesh, param_shard="fsdp", prequant=False):
+    chips = mesh.size
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # noqa: BLE001
+        mem_d = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        xla_flops = float(cost.get("flops", 0.0))
+        xla_bytes = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # noqa: BLE001
+        xla_flops, xla_bytes = float("nan"), float("nan")
+    # trip-count-aware cost model (XLA's counts while bodies once)
+    from repro.launch.hlo_cost import analyze_hlo
+    try:
+        hlo = compiled.as_text()
+        hlo_len = len(hlo)
+        # archive for offline re-analysis (cost-model iteration w/o recompile)
+        import gzip
+        os.makedirs("results/hlo", exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}" \
+              f"_{quant}_m{cushion_m}_{param_shard}{'_pq' if prequant else ''}"
+        with gzip.open(f"results/hlo/{tag}.hlo.gz", "wt") as f:
+            f.write(hlo)
+        hc = analyze_hlo(hlo)
+        flops = hc["flops"]
+        bytes_acc = hc["bytes"]
+        coll = {"total": hc["collective_bytes"],
+                "counts": hc["collective_counts"]}
+        del hlo
+    except Exception as e:  # noqa: BLE001
+        flops, bytes_acc = xla_flops, xla_bytes
+        coll = {"total": float("nan"), "error": str(e)}
+        hlo_len = 0
+
+    # Roofline terms. cost_analysis of an SPMD-partitioned module reports
+    # the per-device program, so terms are per-chip latencies directly.
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll.get("total", 0) / ICI_BW_PER_LINK
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=lambda k: (terms[k] if terms[k] == terms[k] else -1))
+
+    # MODEL_FLOPS (6ND / 6 N_active D) per device per step
+    n_active = cfg.active_param_count()
+    tokens = B * S if kind == "train" else (B * S if kind == "prefill" else B)
+    mult = 6 if kind == "train" else 2
+    model_flops_total = mult * n_active * tokens
+    model_flops_per_chip = model_flops_total / chips
+
+    return {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant, "cushion_m": cushion_m,
+        "chips": chips, "global_batch": B, "seq_len": S,
+        "flops_per_chip": flops, "bytes_per_chip": bytes_acc,
+        "xla_flops_per_chip": xla_flops, "xla_bytes_per_chip": xla_bytes,
+        "collective_bytes_per_chip": coll.get("total"),
+        "collective_counts": coll.get("counts"),
+        "memory": mem_d,
+        "terms": terms, "dominant": dom,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_frac": (model_flops_per_chip / flops
+                              if flops and flops == flops else None),
+        "hlo_chars": hlo_len,
+        "params": cfg.param_count(), "active_params": n_active,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--cushion", type=int, default=0)
+    ap.add_argument("--microbatches", default="auto")
+    ap.add_argument("--param-shard", default="fsdp", choices=["fsdp", "tp"])
+    ap.add_argument("--prequant", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r["quant"],
+                              r.get("cushion_m", 0),
+                              r.get("param_shard", "fsdp"),
+                              r.get("prequant", False)))
+                except Exception:  # noqa: BLE001
+                    pass
+
+    cells = []
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                if cell_is_applicable(arch, shape):
+                    for mp in meshes:
+                        cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    for arch, shape, mp in cells:
+        key = (arch, shape, "2x16x16" if mp else "16x16", args.quant,
+               args.cushion, args.param_shard, args.prequant)
+        if key in done:
+            print(f"[skip] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = lower_cell(arch, shape, mp, args.quant, args.cushion,
+                             args.microbatches, args.param_shard,
+                             args.prequant)
+            rec["ok"] = True
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "quant": args.quant,
+                   "cushion_m": args.cushion, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        status = "OK" if rec.get("ok") else "FAIL"
+        print(f"[dryrun] {key} {status} ({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

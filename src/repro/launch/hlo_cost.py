@@ -1,0 +1,337 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE, which makes
+scan-over-layers dry-runs undercount FLOPs/bytes/collectives by ~L x M
+(layers x microbatches). This module parses the optimized HLO module,
+builds the computation call graph, extracts static trip counts from loop
+conditions, and accumulates:
+
+  * flops            — dot / convolution FLOPs from shapes
+  * bytes            — HBM traffic proxy: operand+output bytes of top-level
+                       instructions per computation (fusion interiors are
+                       free, matching XLA fusion semantics)
+  * collective_bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+each multiplied by the enclosing loops' trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    tot = 0
+    for dt, dims in _shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    rest: str          # args + attrs (single line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(1), instrs=[])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(name=m.group(1), opcode=m.group(3),
+                                    out_type=m.group(2), rest=m.group(4)))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _called(rest: str) -> List[str]:
+    out = []
+    for attr in ("calls=", "body=", "to_apply="):
+        m = re.search(re.escape(attr) + r"%?([\w\.\-]+)", rest)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+    if m:
+        out += [c.strip().lstrip("%") for c in m.group(1).split(",")]
+    return out
+
+
+def _root_opcode(comps, rest: str) -> str:
+    """Opcode of the ROOT instruction of the computation a fusion calls."""
+    m = re.search(r"calls=%?([\w\.\-]+)", rest)
+    if not m:
+        return ""
+    comp = comps.get(m.group(1))
+    if comp is None or not comp.instrs:
+        return ""
+    return comp.instrs[-1].opcode
+
+
+def _cond_of(rest: str) -> Optional[str]:
+    m = re.search(r"condition=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Static trip count of a counted loop: the integer constant in the
+    condition computation (scan lowers to `i < N`)."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for ins in comp.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for m in re.finditer(r"constant\((\d+)\)", ins.rest):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _first_shape(text: str):
+    s = _shapes(text)
+    return s[0][1] if s else None
+
+
+def _dot_flops(ins: Instr, shape_of: Dict[str, list]) -> float:
+    out_shapes = _shapes(ins.out_type)
+    if not out_shapes:
+        return 0.0
+    out_n = 1
+    for d in out_shapes[0][1]:
+        out_n *= d
+    # lhs shape: from inline type if present, else resolve operand name
+    args = ins.rest.split(")")[0]
+    opnds = _shapes(args)
+    if opnds:
+        lhs = opnds[0][1]
+    else:
+        names = _OPERAND_RE.findall(args)
+        lhs = shape_of.get(names[0]) if names else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    contract = 1
+    if m and lhs:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs):
+                contract *= lhs[int(idx)]
+    # batch dims are part of out_n already
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(ins: Instr, shape_of: Dict[str, list]) -> float:
+    out_shapes = _shapes(ins.out_type)
+    if not out_shapes:
+        return 0.0
+    out_n = 1
+    for d in out_shapes[0][1]:
+        out_n *= d
+    args = ins.rest.split(")")[0]
+    opnds = _shapes(args)
+    if len(opnds) >= 2:
+        kernel = opnds[1][1]
+    else:
+        names = _OPERAND_RE.findall(args)
+        kernel = shape_of.get(names[1]) if len(names) > 1 else None
+    if not kernel:
+        return 0.0
+    kn = 1
+    for d in kernel:
+        kn *= d
+    out_ch = kernel[-1] if kernel else 1
+    return 2.0 * out_n * max(1, kn // max(1, out_ch))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for c in COLLECTIVES:
+            self.collective_counts[c] += o.collective_counts[c]
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    self.collective_bytes * k,
+                    {c: int(self.collective_counts[c] * k)
+                     for c in COLLECTIVES})
+
+
+_FREE_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "after-all", "partition-id", "replica-id")
+
+
+
+def _param_slice_bytes(comp: "Computation") -> Dict[int, int]:
+    """For a fused computation: parameters consumed (possibly through
+    bitcast/convert/copy) by dynamic-slice/gather are charged at SLICE
+    size at the call site (the fusion reads one layer of a scan-stacked
+    buffer, not the whole stack)."""
+    if comp is None:
+        return {}
+    param_idx = {}
+    alias = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+        elif ins.opcode in ("bitcast", "convert", "copy", "reshape",
+                            "transpose"):
+            ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+            if ops:
+                alias[ins.name] = ops[0]
+    def resolve(name, depth=0):
+        if name in param_idx or depth > 4:
+            return name
+        if name in alias:
+            return resolve(alias[name], depth + 1)
+        return name
+    out: Dict[int, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode in ("dynamic-slice", "gather"):
+            ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+            if not ops:
+                continue
+            src = resolve(ops[0])
+            if src in param_idx:
+                nb = _nbytes(ins.out_type)
+                i = param_idx[src]
+                out[i] = min(out.get(i, nb), nb)
+    return out
+
+
+def comp_cost(comps: Dict[str, Computation], name: str,
+              memo: Dict[str, Cost], fused: bool = False) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()        # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    # local name -> output bytes / shape (to resolve operand reads)
+    out_bytes = {ins.name: _nbytes(ins.out_type) for ins in comp.instrs}
+    shape_of = {ins.name: _first_shape(ins.out_type) for ins in comp.instrs}
+    total = Cost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "dot":
+            total.flops += _dot_flops(ins, shape_of)
+        elif op == "convolution":
+            total.flops += _conv_flops(ins, shape_of)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            total.collective_bytes += _nbytes(ins.out_type)
+            total.collective_counts[base] += 1
+        if op == "while":
+            m = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+            body = m.group(1) if m else None
+            cond = _cond_of(ins.rest)
+            trips = trip_count(comps, cond) if cond else 1
+            if body:
+                total += comp_cost(comps, body, memo).scaled(trips)
+            continue
+        for callee in _called(ins.rest):
+            sub = comp_cost(comps, callee, memo, fused=True)
+            # fusion interiors contribute flops/collectives but not bytes
+            total.flops += sub.flops
+            total.collective_bytes += sub.collective_bytes
+            for c in COLLECTIVES:
+                total.collective_counts[c] += sub.collective_counts[c]
+        # HBM-traffic proxy: write output + read operands (resolved locally)
+        if not fused and op not in _FREE_OPS:
+            args = ins.rest.split("), ")[0]
+            opnd_bytes = [out_bytes.get(o, 0)
+                          for o in _OPERAND_RE.findall(args)]
+            if op == "dynamic-slice":
+                # reads only the slice it produces
+                b = 2 * _nbytes(ins.out_type)
+            elif op == "dynamic-update-slice" or (
+                    op == "fusion" and _root_opcode(comps, ins.rest)
+                    == "dynamic-update-slice"):
+                # in-place update: traffic ~ update inputs + slice write,
+                # NOT the full aliased buffer (scan ys / KV-cache writes)
+                small = sorted(opnd_bytes)[:-1] if opnd_bytes else []
+                b = 2 * sum(small)
+            else:
+                if op == "fusion":
+                    m2 = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                    slice_map = _param_slice_bytes(
+                        comps.get(m2.group(1))) if m2 else {}
+                    opnd_bytes = [slice_map.get(i, v)
+                                  for i, v in enumerate(opnd_bytes)]
+                b = _nbytes(ins.out_type) + sum(opnd_bytes)
+            total.bytes += b
+    memo[name] = total
+    return total
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = parse_module(hlo)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: the computation with most instructions
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+    memo: Dict[str, Cost] = {}
+    c = comp_cost(comps, entry, memo)
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": c.collective_bytes,
+            "collective_counts": c.collective_counts}

@@ -1,0 +1,36 @@
+"""Production meshes. Functions (not module-level constants) so importing
+never touches jax device state.
+
+Single pod:  (data=16, model=16)          = 256 chips (TPU v5e-256)
+Multi-pod:   (pod=2, data=16, model=16)   = 512 chips (2 pods over DCN)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "The dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax.")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def single_device_mesh() -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))

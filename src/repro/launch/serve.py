@@ -1,0 +1,70 @@
+"""Serving launcher: batched generation under a quantization mode with an
+optional CushionCache artifact.
+
+    python -m repro.launch.serve --arch paper_tiny --quant pt_static \
+        --cushion artifacts/cushion.npz --tokens 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+from repro.configs import QuantConfig, get_config, reduced
+from repro.data.pipeline import Pipeline, SyntheticCorpus
+from repro.models.registry import build
+from repro.serving.engine import Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper_tiny")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from latest checkpoint")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg, dtype="float32")
+    api = build(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = api.init_params(rng)
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir)
+        step = ckpt.latest_step()
+        if step is not None:
+            from repro.optim.adamw import AdamW, constant_lr
+            opt_state = AdamW(lr=constant_lr(1e-3)).init(params)
+            like = {"params": params, "opt": opt_state._asdict()}
+            params = ckpt.restore(step, like=like)["params"]
+            print(f"[serve] restored step {step}")
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
+    pipe = Pipeline(corpus, batch=args.batch, seq_len=args.prompt_len,
+                    seed=args.seed + 1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(0).items()}
+
+    qcfg = QuantConfig(mode=args.quant)
+    eng = Engine(api, params, qcfg,
+                 max_seq=args.prompt_len + args.tokens + 32)
+    res = eng.generate(batch, args.tokens)
+    print(f"[serve] B={args.batch} prompt={args.prompt_len} "
+          f"gen={args.tokens} TTFT={res.ttft_ms:.1f}ms "
+          f"TPOT={res.tpot_ms:.2f}ms")
+    print("[serve] sample:", res.tokens[0][:16].tolist())
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,422 @@
+"""Shared model components: norms, RoPE, quantized linear with activation
+taps, GQA attention (full-sequence & single-token-decode, cushion-prefix
+aware), MLPs.
+
+Conventions
+-----------
+* params are nested dicts of arrays; stacked over layers for lax.scan.
+* every linear runs through `qlinear`, which applies the configured
+  activation/weight quantizer and (optionally) records activation taps
+  (quant error L_q + order statistics) for calibration / search / analysis.
+* `scales` is a pytree mirroring the taps structure holding `SiteScale`
+  leaves for pt_static deployment; placeholder (ignored) otherwise.
+* the cushion prefix enters attention as per-layer KV (`prefix_kv`:
+  dict(k=(m, K, hd), v=(m, K, hd))), fully visible to every query —
+  exactly "inserted as a prefix KV cache" (paper eq. 8).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import quantization as Q
+from repro.distributed.sharding import constrain
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> Array:
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"g": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["g"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-rotation / llama convention)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: Array, d_head: int, theta: float
+                 ) -> Tuple[Array, Array]:
+    """positions: (...,) -> cos/sin (..., d_head//2), fp32."""
+    inv = 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., n_heads, d_head); cos/sin broadcast over the head axis."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear with taps
+# ---------------------------------------------------------------------------
+
+def get_site(scales: Optional[Params], name: str) -> Optional[Q.SiteScale]:
+    if scales is None:
+        return None
+    return scales.get(name)
+
+
+def qlinear(x: Array, w: Array, b: Optional[Array], qcfg: QuantConfig,
+            scales: Optional[Params], site: str, taps: Optional[Dict],
+            n_skip: int = 0) -> Array:
+    """y = q(x) @ q(w) + b, recording taps for `site` when collecting."""
+    if taps is not None:
+        taps[site] = {
+            "qerr": Q.site_qerr(x, qcfg, get_site(scales, site), n_skip),
+            **Q.site_stats(x, n_skip),
+        }
+    y = Q.qdot(x, w, qcfg, get_site(scales, site))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def placeholder_scales(sites: Tuple[str, ...], n_layers: int) -> Params:
+    """Stacked (L,)-leaf SiteScale tree (used when no calibration is loaded;
+    values are ignored unless qcfg.mode == 'pt_static')."""
+    one = lambda: Q.SiteScale(scale=jnp.ones((n_layers,), jnp.float32),
+                              zero=jnp.zeros((n_layers,), jnp.float32))
+    return {s: one() for s in sites}
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+ATTN_SITES = ("qkv", "o")
+
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    hd, H, K = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2 = jax.random.split(key)
+    dt = dtype_of(cfg)
+    p = {
+        "wqkv": dense_init(k1, cfg.d_model, (H + 2 * K) * hd, dt),
+        "wo": dense_init(k2, H * hd, cfg.d_model, dt,
+                         scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bqkv"] = jnp.zeros(((H + 2 * K) * hd,), dt)
+    return p
+
+
+def _split_qkv(qkv: Array, cfg: ModelConfig) -> Tuple[Array, Array, Array]:
+    hd, H, K = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(*q.shape[:-1], H, hd)
+    k = k.reshape(*k.shape[:-1], K, hd)
+    v = v.reshape(*v.shape[:-1], K, hd)
+    return q, k, v
+
+
+FLASH_THRESHOLD = 4096 * 4096   # S*T above this -> chunked online softmax
+FLASH_Q_CHUNK = 512
+FLASH_KV_CHUNK = 1024
+
+
+def _sdpa_dense(q: Array, k: Array, v: Array, mask: Optional[Array],
+                cfg: ModelConfig) -> Array:
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    if S > 1:
+        q = constrain(q, "B", None, "M")
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    from repro.flags import DECODE_SPLIT_KV
+    if S == 1 and DECODE_SPLIT_KV:
+        # decode: keep the KV-sequence axis sharded (split-KV /
+        # flash-decoding); the softmax over T lowers to a reduce pair.
+        # Sharding heads here instead forces a full reshard of the cache
+        # every layer (EXPERIMENTS.md §Perf, deepseek decode iteration).
+        logits = constrain(logits, "B", None, None, None, "M")
+    else:
+        logits = constrain(logits, "B", "M")
+    logits = logits / np.sqrt(hd)
+    if mask is not None:
+        if mask.ndim == 3:
+            m = mask[:, None, None, :, :]
+        else:
+            m = mask[None, None, None, :, :]
+        logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def flash_attention_jnp(q: Array, k: Array, v: Array, cfg: ModelConfig,
+                        causal: bool, prefix_len: int = 0,
+                        q_chunk: int = FLASH_Q_CHUNK,
+                        kv_chunk: int = FLASH_KV_CHUNK) -> Array:
+    """Chunked online-softmax attention (pure jnp; memory O(chunk^2) instead
+    of O(S*T)). Also the oracle for the Pallas flash kernel.
+
+    q: (B,S,H,hd); k/v: (B,T,K,hd) where T = prefix_len + S for causal
+    self-attention with a cushion prefix (prefix positions fully visible).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq = -(-S // q_chunk)
+    nk = -(-T // kv_chunk)
+    Sp, Tp = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qh = qp.reshape(B, nq, q_chunk, K, G, hd)
+    kh = kp.reshape(B, nk, kv_chunk, K, hd)
+    vh = vp.reshape(B, nk, kv_chunk, K, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_block(qi, qc):
+        # qc: (B, q_chunk, K, G, hd); online softmax over kv chunks
+        acc0 = jnp.zeros((B, q_chunk, K, G, hd), jnp.float32)
+        m0 = jnp.full((B, K, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+
+        def kv_block(carry, ki):
+            acc, m, l = carry
+            kc = kh[:, ki]
+            vc = vh[:, ki]
+            s = jnp.einsum("bskgh,btkh->bkgst", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            iq = qi * q_chunk + jnp.arange(q_chunk)
+            jk = ki * kv_chunk + jnp.arange(kv_chunk)
+            valid = (jk < T)[None, :]
+            if causal:
+                vis = (jk[None, :] < prefix_len) | \
+                      (jk[None, :] <= iq[:, None] + prefix_len)
+                valid = valid & vis
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(valid[None, None, None], p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * jnp.transpose(alpha, (0, 3, 1, 2))[..., None] \
+                + jnp.einsum("bkgst,btkh->bskgh", p, vc.astype(jnp.float32))
+            return (acc, m_new, l), ()
+
+        (acc, m, l), _ = jax.lax.scan(kv_block, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        lT = jnp.transpose(l, (0, 3, 1, 2))[..., None]
+        return acc / jnp.maximum(lT, 1e-30)
+
+    out = jax.lax.map(lambda i: q_block(i, qh[:, i]), jnp.arange(nq))
+    out = jnp.transpose(out, (1, 0, 2, 3, 4, 5)) \
+        .reshape(B, Sp, K * G * hd)[:, :S]
+    return out.reshape(B, S, H, hd).astype(v.dtype)
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array],
+          cfg: ModelConfig) -> Array:
+    """q: (B,S,H,hd); k/v: (B,T,K,hd); mask: (S,T) or (B,S,T) bool or None.
+    GQA: H = K * G. Returns (B,S,H,hd). Dispatches to the chunked flash
+    path for large S*T (the mask is then re-derived from causal+prefix
+    structure by the callers that need it)."""
+    return _sdpa_dense(q, k, v, mask, cfg)
+
+
+def attention_full(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                   scales: Optional[Params], taps: Optional[Dict],
+                   positions: Array,
+                   prefix_kv: Optional[Params] = None,
+                   causal: bool = True,
+                   n_skip: int = 0,
+                   return_kv: bool = False):
+    """Full-sequence attention (train / prefill).
+
+    positions: (S,) absolute positions of x's tokens (already offset past the
+    cushion prefix). prefix_kv: dict(k,v) of shape (m, K, hd) — the
+    CushionCache for this layer; fully visible to all queries.
+    """
+    B, S, _ = x.shape
+    qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps,
+                  n_skip)
+    q, k, v = _split_qkv(qkv, cfg)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k = constrain(k, "B", None, "M")
+    v = constrain(v, "B", None, "M")
+    new_kv = (k, v)
+
+    m = 0
+    if prefix_kv is not None:
+        m = prefix_kv["k"].shape[0]
+        pk = jnp.broadcast_to(prefix_kv["k"][None], (B, m) + prefix_kv["k"].shape[1:])
+        pv = jnp.broadcast_to(prefix_kv["v"][None], (B, m) + prefix_kv["v"].shape[1:])
+        k = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+
+    T = k.shape[1]
+    if S * T >= FLASH_THRESHOLD:
+        out = flash_attention_jnp(q, k, v, cfg, causal=causal, prefix_len=m)
+    else:
+        if causal:
+            i = jnp.arange(S)[:, None]
+            j = jnp.arange(m + S)[None, :]
+            mask = j < (i + m + 1)      # prefix (j<m) always visible
+        else:
+            mask = None
+        out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y = qlinear(out, p["wo"], None, qcfg, scales, "o", taps, n_skip)
+    if return_kv:
+        return y, new_kv
+    return y
+
+
+def attention_decode(p: Params, x: Array, cache_k: Array, cache_v: Array,
+                     pos: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                     scales: Optional[Params], taps: Optional[Dict]):
+    """Single-token decode. x: (B,1,D); cache_k/v: (B,Smax,K,hd); pos: ()
+    absolute write position (cushion prefix occupies cache[:m]).
+
+    KV-cache sequence axis is shardable on `model` (flash-decoding style
+    split-KV): the logits/softmax over the sharded axis lower to a
+    reduce-scatter/all-reduce pair under GSPMD.
+    """
+    B = x.shape[0]
+    qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps)
+    q, k, v = _split_qkv(qkv, cfg)
+    posv = jnp.asarray(pos)[None]       # (1,)
+    cos, sin = rope_cos_sin(posv, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    Smax = cache_k.shape[1]
+    mask = (jnp.arange(Smax) <= pos)[None, :]
+    mask = jnp.broadcast_to(mask, (1, Smax))
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    y = qlinear(out, p["wo"], None, qcfg, scales, "o", taps)
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+MLP_SITES = ("mlp_in", "down")
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, cfg.d_model, d_ff, dt),
+         "w_down": dense_init(k2, d_ff, cfg.d_model, dt,
+                              scale=1.0 / np.sqrt(2 * cfg.n_layers))}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(k3, cfg.d_model, d_ff, dt)
+    return p
+
+
+def apply_mlp(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+              scales: Optional[Params], taps: Optional[Dict],
+              n_skip: int = 0) -> Array:
+    up = qlinear(x, p["w_up"], None, qcfg, scales, "mlp_in", taps, n_skip)
+    if cfg.gated_mlp:
+        # gate shares the "mlp_in" site (same input tensor -> same scale);
+        # taps recorded once on the up projection.
+        gate = qlinear(x, p["w_gate"], None, qcfg, scales, "mlp_in", None,
+                       n_skip)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain(h, "B", None, "M")
+    return qlinear(h, p["w_down"], None, qcfg, scales, "down", taps, n_skip)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    p = {"embed": {"w": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                           jnp.float32) * 0.02).astype(dt)}}
+    if not cfg.tie_embeddings:
+        p["head"] = {"w": dense_init(jax.random.fold_in(key, 1), cfg.d_model,
+                                     cfg.vocab_size, dt)}
+    return p
+
+
+def embed_tokens(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(p["embed"]["w"], tokens, axis=0)
+    return constrain(x, "B")
+
+
+def lm_head(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+            scales: Optional[Params], taps: Optional[Dict],
+            n_skip: int = 0) -> Array:
+    w = p["embed"]["w"].T if cfg.tie_embeddings else p["head"]["w"]
+    site = {"head": scales["head"]} if (scales is not None and "head" in scales) else None
+    if taps is not None:
+        taps["head"] = {"qerr": Q.site_qerr(x, qcfg, get_site(site, "head"),
+                                            n_skip),
+                        **Q.site_stats(x, n_skip)}
+    logits = Q.qdot(x, w, qcfg, get_site(site, "head"))
+    return constrain(logits, "B", None, "M")
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean next-token CE; logits (B,S,V) (vocab possibly model-sharded),
+    labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,291 @@
+"""Whisper-style encoder-decoder backbone. The audio conv frontend is a STUB
+per the assignment: inputs are precomputed frame embeddings (B, T_enc, D).
+
+Decoder: causal self-attention (with optional CushionCache prefix KV — the
+paper's technique applied to the decoder; see DESIGN.md §5) + cross-attention
+over encoder states + MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import quantization as Q
+from repro.distributed.sharding import constrain
+from repro.models import common as C
+from repro.models import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+ENC_SITES = ("qkv", "o", "mlp_in", "down")
+DEC_SITES = ("qkv", "o", "xq", "xo", "mlp_in", "down")
+
+
+def xattn_init(key, cfg: ModelConfig) -> Params:
+    hd, H, K = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 3)
+    dt = C.dtype_of(cfg)
+    return {"wq": C.dense_init(ks[0], cfg.d_model, H * hd, dt),
+            "wkv": C.dense_init(ks[1], cfg.d_model, 2 * K * hd, dt),
+            "wo": C.dense_init(ks[2], H * hd, cfg.d_model, dt,
+                               scale=1.0 / np.sqrt(2 * cfg.n_layers))}
+
+
+def cross_attention(p: Params, x: Array, enc_kv: Tuple[Array, Array],
+                    cfg: ModelConfig, qcfg: QuantConfig,
+                    scales: Optional[Params], taps: Optional[Dict],
+                    n_skip: int = 0) -> Array:
+    """x: (B,S,D); enc_kv: (k, v) each (B,T,K,hd) precomputed from encoder."""
+    B, S, _ = x.shape
+    hd, H = cfg.head_dim, cfg.n_heads
+    q = C.qlinear(x, p["wq"], None, qcfg, scales, "xq", taps, n_skip)
+    q = q.reshape(B, S, H, hd)
+    k, v = enc_kv
+    out = C._sdpa(q, k, v, None, cfg)
+    out = out.reshape(B, S, H * hd)
+    return C.qlinear(out, p["wo"], None, qcfg, scales, "xo", taps, n_skip)
+
+
+def enc_kv(p: Params, enc_out: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    B, Te, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    kv = enc_out @ p["wkv"]
+    k, v = jnp.split(kv, 2, axis=-1)
+    return k.reshape(B, Te, K, hd), v.reshape(B, Te, K, hd)
+
+
+def enc_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": C.norm_init(cfg), "attn": C.attn_init(k1, cfg),
+            "ln2": C.norm_init(cfg), "mlp": C.mlp_init(k2, cfg)}
+
+
+def dec_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": C.norm_init(cfg), "attn": C.attn_init(k1, cfg),
+            "lnx": C.norm_init(cfg), "xattn": xattn_init(k2, cfg),
+            "ln2": C.norm_init(cfg), "mlp": C.mlp_init(k3, cfg)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    ke, kd, kemb = jax.random.split(rng, 3)
+    ne = cfg.encdec.encoder_layers
+    p = C.embed_init(kemb, cfg)
+    p["encoder"] = jax.vmap(lambda k: enc_layer_init(k, cfg))(
+        jax.random.split(ke, ne))
+    p["decoder"] = jax.vmap(lambda k: dec_layer_init(k, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    p["ln_enc"] = C.norm_init(cfg)
+    p["ln_f"] = C.norm_init(cfg)
+    return p
+
+
+def encode(params: Params, frames: Array, cfg: ModelConfig,
+           qcfg: QuantConfig, scales: Optional[Params] = None,
+           collect: bool = False, remat: bool = True):
+    """frames: (B, T_enc, D) precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(C.dtype_of(cfg))
+    x = constrain(x, "B")
+    Te = x.shape[1]
+    positions = jnp.arange(Te)
+    ne = cfg.encdec.encoder_layers
+    lscales = (scales["enc"] if scales is not None
+               else C.placeholder_scales(ENC_SITES, ne))
+
+    def body(h, xs):
+        lp, lsc = xs
+        taps: Optional[Dict] = {} if collect else None
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a = C.attention_full(lp["attn"], hn, cfg, qcfg, lsc, taps, positions,
+                             causal=False)
+        h = h + a
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, taps)
+        h = constrain(h, "B")
+        return h, (taps if collect else {})
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, enc_taps = jax.lax.scan(body, x, (params["encoder"], lscales))
+    return C.apply_norm(params["ln_enc"], x, cfg), enc_taps
+
+
+def forward(params: Params, tokens: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, frames: Array,
+            scales: Optional[Params] = None,
+            cushion: Optional[Params] = None, collect: bool = False,
+            n_skip: int = 0, remat: bool = True):
+    """Teacher-forced decoder pass. frames: (B,T_enc,D)."""
+    enc_out, enc_taps = encode(params, frames, cfg, qcfg, scales, collect,
+                               remat)
+    x = C.embed_tokens(params, tokens, cfg)
+    S = x.shape[1]
+    m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
+    positions = m + jnp.arange(S)
+    L = cfg.n_layers
+    lscales = (scales["dec"] if scales is not None
+               else C.placeholder_scales(DEC_SITES, L))
+    pre = cushion["kv"] if cushion is not None else {
+        "k": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
+        "v": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
+
+    def body(h, xs):
+        lp, lsc, lpre = xs
+        taps: Optional[Dict] = {} if collect else None
+        if collect:
+            taps["block_in"] = Q.site_stats(h, n_skip)
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a = C.attention_full(lp["attn"], hn, cfg, qcfg, lsc, taps, positions,
+                             prefix_kv=lpre, causal=True, n_skip=n_skip)
+        h = h + a
+        hn = C.apply_norm(lp["lnx"], h, cfg)
+        kv = enc_kv(lp["xattn"], enc_out, cfg)
+        h = h + cross_attention(lp["xattn"], hn, kv, cfg, qcfg, lsc, taps,
+                                n_skip)
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, taps, n_skip)
+        h = constrain(h, "B")
+        return h, (taps if collect else {})
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, dec_taps = jax.lax.scan(body, x, (params["decoder"], lscales, pre))
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    head_taps: Optional[Dict] = {} if collect else None
+    logits = C.lm_head(params, x, cfg, qcfg, scales, head_taps, n_skip)
+    taps: Dict = {}
+    if collect:
+        taps = {"enc_layers": enc_taps, "layers": dec_taps,
+                **(head_taps or {}), "final_in": Q.site_stats(x, n_skip)}
+    return logits, taps
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    dt = dtype or C.dtype_of(cfg)
+    K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    Te = cfg.encdec.encoder_seq
+    return {"k": jnp.zeros((L, batch, max_seq, K, hd), dt),
+            "v": jnp.zeros((L, batch, max_seq, K, hd), dt),
+            "xk": jnp.zeros((L, batch, Te, K, hd), dt),
+            "xv": jnp.zeros((L, batch, Te, K, hd), dt)}
+
+
+cushion_zeros = T.cushion_zeros
+
+
+def cache_roles(cfg: ModelConfig) -> Params:
+    kv = (None, "B", "M", None, None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+
+
+def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
+            qcfg: QuantConfig, *, frames: Array,
+            scales: Optional[Params] = None,
+            cushion: Optional[Params] = None, remat: bool = False):
+    enc_out, _ = encode(params, frames, cfg, qcfg, scales, False, remat)
+    x = C.embed_tokens(params, tokens, cfg)
+    B, S, _ = x.shape
+    m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
+    positions = m + jnp.arange(S)
+    L = cfg.n_layers
+    lscales = (scales["dec"] if scales is not None
+               else C.placeholder_scales(DEC_SITES, L))
+    pre = cushion["kv"] if cushion is not None else {
+        "k": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
+        "v": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
+
+    def body(h, xs):
+        lp, lsc, lpre = xs
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a, kv = C.attention_full(lp["attn"], hn, cfg, qcfg, lsc, None,
+                                 positions, prefix_kv=lpre, causal=True,
+                                 return_kv=True)
+        h = h + a
+        hn = C.apply_norm(lp["lnx"], h, cfg)
+        xkv = enc_kv(lp["xattn"], enc_out, cfg)
+        h = h + cross_attention(lp["xattn"], hn, xkv, cfg, qcfg, lsc, None)
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, None)
+        h = constrain(h, "B")
+        return h, (kv, xkv)
+
+    x, ((ks, vs), (xks, xvs)) = jax.lax.scan(
+        body, x, (params["decoder"], lscales, pre))
+    cache, m2 = T.write_cushion_to_cache(
+        {"k": cache["k"], "v": cache["v"]}, cushion)
+    cache = {"k": jax.lax.dynamic_update_slice(
+                 cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0)),
+             "v": jax.lax.dynamic_update_slice(
+                 cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0)),
+             "xk": xks.astype(C.dtype_of(cfg)),
+             "xv": xvs.astype(C.dtype_of(cfg))}
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    logits = C.lm_head(params, x[:, -1:], cfg, qcfg, None, None)
+    return logits, cache, jnp.asarray(m + S, jnp.int32)
+
+
+def decode_step(params: Params, token: Array, pos: Array, cache: Params,
+                cfg: ModelConfig, qcfg: QuantConfig, *,
+                scales: Optional[Params] = None):
+    x = C.embed_tokens(params, token[:, None], cfg)
+    L = cfg.n_layers
+    lscales = (scales["dec"] if scales is not None
+               else C.placeholder_scales(DEC_SITES, L))
+
+    def body(h, xs):
+        lp, lsc, ck, cv, xk, xv = xs
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a, ck, cv = C.attention_decode(lp["attn"], hn, ck, cv, pos, cfg,
+                                       qcfg, lsc, None)
+        h = h + a
+        hn = C.apply_norm(lp["lnx"], h, cfg)
+        h = h + cross_attention(lp["xattn"], hn, (xk, xv), cfg, qcfg, lsc,
+                                None)
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, None)
+        return h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"], lscales,
+                                         cache["k"], cache["v"],
+                                         cache["xk"], cache["xv"]))
+    cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    logits = C.lm_head(params, x, cfg, qcfg, None, None)
+    return logits[:, 0], cache
+
+
+def loss_fn(params: Params, tokens: Array, labels: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, frames: Array, scales=None, cushion=None,
+            collect: bool = False, n_skip: int = 0, remat: bool = True,
+            lam: float = 0.0):
+    logits, taps = forward(params, tokens, cfg, qcfg, frames=frames,
+                           scales=scales, cushion=cushion,
+                           collect=collect or lam > 0, n_skip=n_skip,
+                           remat=remat)
+    if n_skip:
+        logits = logits[:, n_skip:]
+        labels = labels[:, n_skip:]
+    ce = C.cross_entropy(logits, labels)
+    loss = ce
+    aux = {"ce": ce, "taps": taps}
+    if lam > 0 or collect:
+        qerr = T.total_qerr(taps)
+        aux["qerr"] = qerr
+        if lam > 0:
+            loss = loss + lam * qerr
+    return loss, aux
+
+
+def placeholder_all_scales(cfg: ModelConfig) -> Params:
+    return {"enc": C.placeholder_scales(ENC_SITES, cfg.encdec.encoder_layers),
+            "dec": C.placeholder_scales(DEC_SITES, cfg.n_layers),
+            "head": Q.SiteScale(scale=jnp.ones(()), zero=jnp.zeros(()))}

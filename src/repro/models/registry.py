@@ -1,0 +1,183 @@
+"""Uniform model API over all families: build(cfg) -> ModelAPI.
+
+Batch dicts:
+  dense/moe         {"tokens", "labels"}
+  ssm/hybrid        {"tokens", "labels"}
+  encdec            + {"frames":  (B, T_enc, D)}   (stub audio frontend)
+  vlm               + {"patches": (B, P, D)}       (stub vision frontend)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Family, ModelConfig, QuantConfig
+from repro.models import common as C
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import moe as MO
+from repro.models import ssm  # noqa: F401  (used inside hybrid)
+from repro.models import transformer as TR
+from repro.models import vlm as VL
+from repro.models import xlstm as XL
+
+Params = Dict[str, Any]
+
+
+def family_module(cfg: ModelConfig):
+    return {
+        Family.DENSE: TR, Family.MOE: MO, Family.SSM: XL,
+        Family.HYBRID: HY, Family.ENCDEC: ED, Family.VLM: VL,
+    }[cfg.family]
+
+
+def _extra_kwargs(cfg: ModelConfig, batch: Dict[str, Any]) -> Dict[str, Any]:
+    if cfg.family == Family.ENCDEC:
+        return {"frames": batch["frames"]}
+    if cfg.family == Family.VLM:
+        return {"patches": batch["patches"]}
+    return {}
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    mod: Any
+
+    @property
+    def sites(self) -> Tuple[str, ...]:
+        if self.cfg.family == Family.ENCDEC:
+            return ED.DEC_SITES
+        return self.mod.SITES
+
+    def init_params(self, rng) -> Params:
+        return self.mod.init_params(self.cfg, rng)
+
+    def loss_fn(self, params, batch, qcfg: QuantConfig, **kw):
+        return self.mod.loss_fn(params, batch["tokens"], batch["labels"],
+                                self.cfg, qcfg,
+                                **_extra_kwargs(self.cfg, batch), **kw)
+
+    def forward(self, params, batch, qcfg: QuantConfig, **kw):
+        return self.mod.forward(params, batch["tokens"], self.cfg, qcfg,
+                                **_extra_kwargs(self.cfg, batch), **kw)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype)
+
+    def prefill(self, params, batch, cache, qcfg: QuantConfig, **kw):
+        return self.mod.prefill(params, batch["tokens"], cache, self.cfg,
+                                qcfg, **_extra_kwargs(self.cfg, batch), **kw)
+
+    def decode_step(self, params, token, pos, cache, qcfg: QuantConfig, **kw):
+        return self.mod.decode_step(params, token, pos, cache, self.cfg,
+                                    qcfg, **kw)
+
+    def cushion_zeros(self, m: int, dtype=jnp.float32):
+        return self.mod.cushion_zeros(self.cfg, m, dtype=dtype)
+
+    def forward_with_token_prefix(self, params, prefix_ids, batch,
+                                  qcfg: QuantConfig, **kw):
+        """Forward with a prefix of *real tokens* placed where the cushion
+        will sit at deployment (greedy search, paper §4.1). prefix_ids: (m,)
+        int32. Returns (logits, taps); callers pass collect/n_skip via kw."""
+        cfg = self.cfg
+        m = prefix_ids.shape[0]
+        if cfg.family == Family.VLM:
+            # cushion sits before the patches: prepend embed(prefix)+patches
+            pre = jnp.take(params["embed"]["w"], prefix_ids, axis=0)[None]
+            pre = jnp.broadcast_to(
+                pre, (batch["patches"].shape[0],) + pre.shape[1:])
+            pre = jnp.concatenate(
+                [pre.astype(batch["patches"].dtype), batch["patches"]], axis=1)
+            return TR.forward(params, batch["tokens"], cfg, qcfg,
+                              prepend_embeds=pre, **kw)
+        toks = jnp.concatenate(
+            [jnp.broadcast_to(prefix_ids[None],
+                              (batch["tokens"].shape[0], m)),
+             batch["tokens"]], axis=1)
+        nb = dict(batch)
+        nb["tokens"] = toks
+        return self.forward(params, nb, qcfg, **kw)
+
+    def extract_cushion(self, params, prefix_ids, batch,
+                        qcfg: QuantConfig) -> Params:
+        """Turn a searched token prefix into the deployment Cushion artifact
+        (per-layer KV for attention archs; recurrent states for SSM/hybrid)
+        by running the prefix through the model once (paper: 'their keys and
+        values are cached and reused at inference', eq. 8)."""
+        cfg = self.cfg
+        m = int(prefix_ids.shape[0])
+        toks = prefix_ids[None]
+        if cfg.family == Family.SSM:
+            _, _, states = XL.forward(params, toks, cfg, qcfg,
+                                      return_cache=True, remat=False)
+            return {"state": jax.tree_util.tree_map(lambda a: a[:, 0], states)}
+        if cfg.family == Family.HYBRID:
+            cache = HY.init_cache(cfg, 1, m)
+            _, cache, _ = HY.prefill(params, toks, cache, cfg, qcfg)
+            return {"kv": {"k": cache["k"][:, 0, :m], "v": cache["v"][:, 0, :m]},
+                    "state": {"h": cache["h"][:, :, 0],
+                              "conv": cache["conv"][:, :, 0]}}
+        if cfg.family == Family.ENCDEC:
+            # null acoustic context for the prefix pass (DESIGN.md §5)
+            frames = jnp.zeros((1, cfg.encdec.encoder_seq, cfg.d_model),
+                               C.dtype_of(cfg))
+            cache = ED.init_cache(cfg, 1, m)
+            _, cache, _ = ED.prefill(params, toks, cache, cfg, qcfg,
+                                     frames=frames)
+            return {"kv": {"k": cache["k"][:, 0, :m],
+                           "v": cache["v"][:, 0, :m]}}
+        mod = MO if cfg.family == Family.MOE else TR
+        cache = mod.init_cache(cfg, 1, m)
+        _, cache, _ = mod.prefill(params, toks, cache, cfg, qcfg)
+        return {"kv": {"k": cache["k"][:, 0, :m], "v": cache["v"][:, 0, :m]}}
+
+    # ------------------------------------------------------------------
+    # Input construction
+    # ------------------------------------------------------------------
+
+    def make_batch(self, rng, batch: int, seq_len: int) -> Dict[str, Any]:
+        """Concrete random batch (smoke tests / CPU experiments)."""
+        cfg = self.cfg
+        text_len = self.text_len(seq_len)
+        toks = jax.random.randint(rng, (batch, text_len + 1), 0,
+                                  cfg.vocab_size, dtype=jnp.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.family == Family.ENCDEC:
+            out["frames"] = jax.random.normal(
+                rng, (batch, cfg.encdec.encoder_seq, cfg.d_model),
+                C.dtype_of(cfg)) * 0.02
+        if cfg.family == Family.VLM:
+            out["patches"] = jax.random.normal(
+                rng, (batch, cfg.vlm.num_patches, cfg.d_model),
+                C.dtype_of(cfg)) * 0.02
+        return out
+
+    def text_len(self, seq_len: int) -> int:
+        """Token count such that total positions == seq_len."""
+        if self.cfg.family == Family.VLM:
+            return max(1, seq_len - self.cfg.vlm.num_patches)
+        return seq_len
+
+    def input_specs(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        text_len = self.text_len(seq_len)
+        sds = jax.ShapeDtypeStruct
+        out = {"tokens": sds((batch, text_len), jnp.int32),
+               "labels": sds((batch, text_len), jnp.int32)}
+        if cfg.family == Family.ENCDEC:
+            out["frames"] = sds((batch, cfg.encdec.encoder_seq, cfg.d_model),
+                                C.dtype_of(cfg))
+        if cfg.family == Family.VLM:
+            out["patches"] = sds((batch, cfg.vlm.num_patches, cfg.d_model),
+                                 C.dtype_of(cfg))
+        return out
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(cfg=cfg, mod=family_module(cfg))

@@ -1,0 +1,168 @@
+"""Mamba selective-SSM block (used standalone and inside the Jamba hybrid).
+
+Training/prefill uses `jax.lax.associative_scan` over the sequence (parallel
+prefix-scan of the diagonal linear recurrence — the TPU-native analogue of
+the CUDA selective-scan kernel). Decode is a single recurrent step carrying
+(conv window, SSM state) — O(1) per token, which is what makes the hybrid
+archs runnable at 500k context.
+
+Sites: "mamba_in" (in-projection input), "mamba_out" (out-projection input).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import quantization as Q
+from repro.distributed.sharding import constrain
+from repro.models import common as C
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+SITES = ("mamba_in", "mamba_out")
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    dt_rank = max(1, int(np.ceil(cfg.d_model / 16)))
+    return inner, s.d_state, s.d_conv, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    inner, d_state, d_conv, dt_rank = dims(cfg)
+    D = cfg.d_model
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (inner, 1))
+    p = {
+        "w_in": C.dense_init(ks[0], D, 2 * inner, dt),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, inner), jnp.float32)
+                   / np.sqrt(d_conv)).astype(dt),
+        "conv_b": jnp.zeros((inner,), dt),
+        "w_x": C.dense_init(ks[2], inner, dt_rank + 2 * d_state, dt),
+        "dt_w": C.dense_init(ks[3], dt_rank, inner, dt),
+        "dt_b": jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(ks[4], (inner,), jnp.float32)
+                    * (np.log(0.1) - np.log(0.001)) + np.log(0.001))) - 1.0
+        ).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "Dskip": jnp.ones((inner,), jnp.float32),
+        "w_out": C.dense_init(ks[5], inner, D, dt,
+                              scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    return p
+
+
+def _conv_full(x: Array, w: Array, b: Array) -> Array:
+    """Causal depthwise conv. x: (B,S,Cin); w: (d_conv, Cin)."""
+    d_conv = w.shape[0]
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :],
+        window_strides=(1,), padding=[(d_conv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return y + b
+
+
+def _ssm_inputs(p: Params, xc: Array, cfg: ModelConfig):
+    """xc: (B,S,inner) post-conv. Returns deltaA (B,S,inner,N), deltaBx."""
+    inner, d_state, _, dt_rank = dims(cfg)
+    proj = xc @ p["w_x"].astype(xc.dtype)
+    dt_raw, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_w"].astype(jnp.float32)
+                         + p["dt_b"])                        # (B,S,inner)
+    A = -jnp.exp(p["A_log"])                                  # (inner,N)
+    deltaA = jnp.exp(dt[..., None] * A)                       # (B,S,inner,N)
+    deltaBx = (dt * xc.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]               # (B,S,inner,N)
+    return deltaA, deltaBx, Cm.astype(jnp.float32)
+
+
+def apply_mamba(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                scales: Optional[Params], taps: Optional[Dict],
+                n_skip: int = 0,
+                init_state: Optional[Params] = None,
+                return_state: bool = False):
+    """Full-sequence Mamba mixer. init_state: {"h": (B,inner,N) or (inner,N),
+    "conv": (B,d_conv-1,inner)} — the CushionState analogue of prefix KV."""
+    B, S, D = x.shape
+    inner, d_state, d_conv, _ = dims(cfg)
+    xz = C.qlinear(x, p["w_in"], None, qcfg, scales, "mamba_in", taps, n_skip)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "B", None, "M")
+
+    if init_state is not None and "conv" in init_state:
+        cv = init_state["conv"]
+        if cv.ndim == 2:
+            cv = jnp.broadcast_to(cv[None], (B,) + cv.shape)
+        xpad = jnp.concatenate([cv.astype(xin.dtype), xin], axis=1)
+        xc = _conv_full(xpad, p["conv_w"], p["conv_b"])[:, d_conv - 1:]
+    else:
+        xc = _conv_full(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    deltaA, deltaBx, Cm = _ssm_inputs(p, xc, cfg)
+    if init_state is not None and "h" in init_state:
+        h0 = init_state["h"].astype(jnp.float32)
+        if h0.ndim == 2:
+            h0 = jnp.broadcast_to(h0[None], (B,) + h0.shape)
+        # fold h0 into the first step: h_1 = A_1 h_0 + Bx_1
+        deltaBx = deltaBx.at[:, 0].add(deltaA[:, 0] * h0)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a2 * a1, a2 * b1 + b2
+
+    deltaA = constrain(deltaA, "B", None, "M", None)
+    deltaBx = constrain(deltaBx, "B", None, "M", None)
+    _, hs = jax.lax.associative_scan(combine, (deltaA, deltaBx), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", hs, Cm) \
+        + p["Dskip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = constrain(y, "B", None, "M")
+    out = C.qlinear(y, p["w_out"], None, qcfg, scales, "mamba_out", taps,
+                    n_skip)
+    if return_state:
+        state = {"h": hs[:, -1],
+                 "conv": jnp.concatenate(
+                     [jnp.zeros((B, d_conv - 1, inner), xin.dtype), xin],
+                     axis=1)[:, -(d_conv - 1):]}
+        return out, state
+    return out
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Params:
+    inner, d_state, d_conv, _ = dims(cfg)
+    return {"h": jnp.zeros((batch, inner, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, inner), C.dtype_of(cfg))}
+
+
+def decode_mamba(p: Params, x: Array, state: Params, cfg: ModelConfig,
+                 qcfg: QuantConfig, scales: Optional[Params],
+                 taps: Optional[Dict] = None):
+    """Single-token step. x: (B,1,D); state: {"h": (B,inner,N),
+    "conv": (B,d_conv-1,inner)}."""
+    B = x.shape[0]
+    inner, d_state, d_conv, _ = dims(cfg)
+    xz = C.qlinear(x, p["w_in"], None, qcfg, scales, "mamba_in", taps)
+    xin, z = jnp.split(xz, 2, axis=-1)           # (B,1,inner)
+    win = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)
+    xc = jnp.einsum("bci,ci->bi", win, p["conv_w"].astype(xin.dtype)) \
+        + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                # (B,1,inner)
+    deltaA, deltaBx, Cm = _ssm_inputs(p, xc, cfg)
+    h = deltaA[:, 0] * state["h"] + deltaBx[:, 0]
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0]) \
+        + p["Dskip"] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    out = C.qlinear(y, p["w_out"], None, qcfg, scales, "mamba_out", taps)
+    new_state = {"h": h, "conv": win[:, 1:]}
+    return out, new_state

@@ -1,0 +1,286 @@
+"""Dense decoder-only transformer (llama-style; qwen QKV-bias variant via
+config). Defines the canonical model API all families follow:
+
+    init_params(cfg, rng)                     -> params
+    forward(params, tokens, cfg, qcfg, ...)   -> (logits, taps)   # full seq
+    init_cache(cfg, B, Smax, ...)             -> cache
+    prefill(params, tokens, cache, ...)       -> (logits, cache, pos)
+    decode_step(params, token, pos, cache,..) -> (logits, cache)
+
+The layer stack is a `lax.scan` over stacked per-layer params so the lowered
+HLO is O(1) in depth (critical for the 95-layer dry-runs), with optional
+remat on the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import quantization as Q
+from repro.distributed.sharding import constrain
+from repro.models import common as C
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+SITES = C.ATTN_SITES + C.MLP_SITES  # ("qkv", "o", "mlp_in", "down")
+
+
+def layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": C.norm_init(cfg), "attn": C.attn_init(k1, cfg),
+            "ln2": C.norm_init(cfg), "mlp": C.mlp_init(k2, cfg)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    k_emb, k_layers = jax.random.split(rng)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    p = C.embed_init(k_emb, cfg)
+    p["layers"] = layers
+    p["ln_f"] = C.norm_init(cfg)
+    return p
+
+
+def _block(lp: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+           lsc: Optional[Params], lpre: Optional[Params], positions: Array,
+           collect: bool, n_skip: int) -> Tuple[Array, Dict]:
+    taps: Optional[Dict] = {} if collect else None
+    h = C.apply_norm(lp["ln1"], x, cfg)
+    if collect:
+        taps["block_in"] = Q.site_stats(x, n_skip)
+    a = C.attention_full(lp["attn"], h, cfg, qcfg, lsc, taps, positions,
+                         prefix_kv=lpre, causal=True, n_skip=n_skip)
+    x = x + a
+    h = C.apply_norm(lp["ln2"], x, cfg)
+    m = C.apply_mlp(lp["mlp"], h, cfg, qcfg, lsc, taps, n_skip)
+    x = x + m
+    x = constrain(x, "B")
+    return x, (taps if collect else {})
+
+
+def forward(params: Params, tokens: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales: Optional[Params] = None,
+            cushion: Optional[Params] = None, collect: bool = False,
+            n_skip: int = 0, prepend_embeds: Optional[Array] = None,
+            remat: bool = True) -> Tuple[Array, Dict]:
+    """Full-sequence causal forward. cushion: {"kv": {"k": (L,m,K,hd), ...}}.
+    prepend_embeds (B,P,D): extra embeddings placed before the token
+    embeddings (VLM patches / greedy-search candidate activations)."""
+    x = C.embed_tokens(params, tokens, cfg)
+    if prepend_embeds is not None:
+        x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
+    positions = m + jnp.arange(S)
+
+    if scales is None:
+        lscales = C.placeholder_scales(SITES, cfg.n_layers)
+        head_sc = None
+    else:
+        lscales = {s: scales[s] for s in SITES}
+        head_sc = scales
+
+    def body(h, xs):
+        lp, lsc, lpre = xs
+        h, taps = _block(lp, h, cfg, qcfg, lsc, lpre, positions, collect,
+                         n_skip)
+        return h, taps
+
+    if remat:
+        body = jax.checkpoint(body)
+    pre = cushion["kv"] if cushion is not None else None
+    xs = (params["layers"], lscales, pre)
+    if pre is None:
+        # scan needs uniform xs; replace None with per-layer empty marker
+        xs = (params["layers"], lscales,
+              {"k": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim),
+                              x.dtype),
+               "v": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim),
+                              x.dtype)})
+    x, layer_taps = jax.lax.scan(body, x, xs)
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    head_taps: Optional[Dict] = {} if collect else None
+    logits = C.lm_head(params, x, cfg, qcfg, head_sc, head_taps, n_skip)
+    if collect:
+        taps = {"layers": layer_taps, **(head_taps or {}),
+                "final_in": Q.site_stats(x, n_skip)}
+    else:
+        taps = {}
+    return logits, taps
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Params:
+    dt = dtype or C.dtype_of(cfg)
+    K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {"k": jnp.zeros((L, batch, max_seq, K, hd), dt),
+            "v": jnp.zeros((L, batch, max_seq, K, hd), dt)}
+
+
+def cache_roles(cfg: ModelConfig) -> Params:
+    """KV-cache sharding roles: (L, B, S, K, hd) — batch on B-axes; the
+    sequence axis on `model` (flash-decoding split-KV) since kv-head counts
+    are often < TP width."""
+    kv = (None, "B", "M", None, None)
+    return {"k": kv, "v": kv}
+
+
+def write_cushion_to_cache(cache: Params, cushion: Optional[Params]) -> Tuple[Params, int]:
+    if cushion is None:
+        return cache, 0
+    kv = cushion["kv"]
+    m = kv["k"].shape[1]
+    k = jnp.broadcast_to(kv["k"][:, None], (kv["k"].shape[0], cache["k"].shape[1]) + kv["k"].shape[1:])
+    v = jnp.broadcast_to(kv["v"][:, None], (kv["v"].shape[0], cache["v"].shape[1]) + kv["v"].shape[1:])
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0)),
+    }
+    return cache, m
+
+
+def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales: Optional[Params] = None,
+            cushion: Optional[Params] = None,
+            prepend_embeds: Optional[Array] = None,
+            remat: bool = False) -> Tuple[Array, Params, Array]:
+    """Process the prompt, fill the KV cache (cushion at [0:m], prompt at
+    [m:m+S]). Returns (last-position logits, cache, next_pos)."""
+    x = C.embed_tokens(params, tokens, cfg)
+    if prepend_embeds is not None:
+        x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    cache, m = write_cushion_to_cache(cache, cushion)
+    positions = m + jnp.arange(S)
+
+    lscales = ({s: scales[s] for s in SITES} if scales is not None
+               else C.placeholder_scales(SITES, cfg.n_layers))
+    pre = cushion["kv"] if cushion is not None else {
+        "k": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
+        "v": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
+
+    def body(h, xs):
+        lp, lsc, lpre = xs
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a, kv = C.attention_full(lp["attn"], hn, cfg, qcfg, lsc, None,
+                                 positions, prefix_kv=lpre, causal=True,
+                                 return_kv=True)
+        h = h + a
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, None)
+        h = constrain(h, "B")
+        return h, kv
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], lscales, pre))
+    # ks: (L, B, S, K, hd) -> write into cache at [m : m+S]
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0)),
+    }
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    logits = C.lm_head(params, x[:, -1:], cfg, qcfg,
+                       scales if scales is not None else None, None)
+    return logits, cache, jnp.asarray(m + S, jnp.int32)
+
+
+def decode_step(params: Params, token: Array, pos: Array, cache: Params,
+                cfg: ModelConfig, qcfg: QuantConfig, *,
+                scales: Optional[Params] = None) -> Tuple[Array, Params]:
+    """One decode step. token: (B,) int32; pos: () int32 absolute position
+    (cushion occupies [0:m), prompt/generated next)."""
+    x = C.embed_tokens(params, token[:, None], cfg)
+    lscales = ({s: scales[s] for s in SITES} if scales is not None
+               else C.placeholder_scales(SITES, cfg.n_layers))
+
+    def body(h, xs):
+        lp, lsc, ck, cv = xs
+        hn = C.apply_norm(lp["ln1"], h, cfg)
+        a, ck, cv = C.attention_decode(lp["attn"], hn, ck, cv, pos, cfg, qcfg,
+                                       lsc, None)
+        h = h + a
+        hn = C.apply_norm(lp["ln2"], h, cfg)
+        h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, None)
+        return h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], lscales,
+                                cache["k"], cache["v"]))
+    cache = {"k": ks, "v": vs}
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    logits = C.lm_head(params, x, cfg, qcfg,
+                       scales if scales is not None else None, None)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Cushion KV parameter shape (for prefix tuning)
+# ---------------------------------------------------------------------------
+
+def cushion_zeros(cfg: ModelConfig, m: int, dtype=jnp.float32) -> Params:
+    K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {"kv": {"k": jnp.zeros((L, m, K, hd), dtype),
+                   "v": jnp.zeros((L, m, K, hd), dtype)}}
+
+
+def loss_fn(params: Params, tokens: Array, labels: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales=None, cushion=None,
+            collect: bool = False, n_skip: int = 0, remat: bool = True,
+            lam: float = 0.0):
+    """Next-token CE (+ optional λ·L_q when collecting)."""
+    logits, taps = forward(params, tokens, cfg, qcfg, scales=scales,
+                           cushion=cushion, collect=collect or lam > 0,
+                           n_skip=n_skip, remat=remat)
+    if n_skip:
+        # loss on the token part only (prefix positions excluded)
+        logits = logits[:, n_skip:]
+        labels = labels[:, n_skip:]
+    ce = C.cross_entropy(logits, labels)
+    loss = ce
+    aux = {"ce": ce, "taps": taps}
+    if lam > 0 or collect:
+        qerr = total_qerr(taps)
+        aux["qerr"] = qerr
+        if lam > 0:
+            loss = loss + lam * qerr
+    return loss, aux
+
+
+def total_qerr(taps: Dict) -> Array:
+    """Sum of L_q over all sites and layers (paper eq. 6, summed over
+    blocks)."""
+    leaves = []
+
+    def visit(d):
+        if isinstance(d, dict):
+            if "qerr" in d:
+                leaves.append(jnp.sum(d["qerr"]))
+            else:
+                for v in d.values():
+                    visit(v)
+    visit(taps)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return functools.reduce(jnp.add, leaves)
+
+
+def placeholder_all_scales(cfg: ModelConfig) -> Params:
+    """Full placeholder scales tree (incl. head) for quantized lowering
+    without a calibration artifact (dry-runs)."""
+    sc = C.placeholder_scales(SITES, cfg.n_layers)
+    sc["head"] = Q.SiteScale(scale=jnp.ones(()), zero=jnp.zeros(()))
+    return sc

@@ -1,0 +1,65 @@
+"""InternVL2-style VLM backbone: standard dense LM (InternLM2-arch) with a
+STUB vision frontend — inputs are precomputed patch embeddings (B, P, D)
+prepended to the token embeddings (assignment: frontend is a stub).
+
+The cushion prefix sits *before* the patch embeddings, so patches and text
+both benefit from the sink (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import common as C
+from repro.models import transformer as T
+
+Array = Any
+Params = Dict[str, Any]
+
+SITES = T.SITES
+init_params = T.init_params
+init_cache = T.init_cache
+cushion_zeros = T.cushion_zeros
+decode_step = T.decode_step
+cache_roles = T.cache_roles
+placeholder_all_scales = T.placeholder_all_scales
+
+
+def forward(params: Params, tokens: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, patches: Array,
+            scales: Optional[Params] = None, cushion: Optional[Params] = None,
+            collect: bool = False, n_skip: int = 0, remat: bool = True):
+    """tokens: (B, S_text); patches: (B, P, D). Sequence = [patches; text]."""
+    return T.forward(params, tokens, cfg, qcfg, scales=scales,
+                     cushion=cushion, collect=collect, n_skip=n_skip,
+                     prepend_embeds=patches, remat=remat)
+
+
+def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
+            qcfg: QuantConfig, *, patches: Array,
+            scales: Optional[Params] = None, cushion: Optional[Params] = None,
+            remat: bool = False):
+    return T.prefill(params, tokens, cache, cfg, qcfg, scales=scales,
+                     cushion=cushion, prepend_embeds=patches, remat=remat)
+
+
+def loss_fn(params: Params, tokens: Array, labels: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, patches: Array, scales=None, cushion=None,
+            collect: bool = False, remat: bool = True, lam: float = 0.0):
+    """CE over the text positions only (patch positions carry no labels)."""
+    P = patches.shape[1]
+    logits, taps = T.forward(params, tokens, cfg, qcfg, scales=scales,
+                             cushion=cushion, collect=collect or lam > 0,
+                             n_skip=P, prepend_embeds=patches, remat=remat)
+    logits = logits[:, P:]
+    ce = C.cross_entropy(logits, labels)
+    loss = ce
+    aux = {"ce": ce, "taps": taps}
+    if lam > 0 or collect:
+        qerr = T.total_qerr(taps)
+        aux["qerr"] = qerr
+        if lam > 0:
+            loss = loss + lam * qerr
+    return loss, aux

@@ -1,0 +1,479 @@
+"""xLSTM language model: alternating mLSTM (matrix-memory, attention-like
+parallel form for training; O(1) recurrent decode) and sLSTM (scalar-memory,
+sequential) blocks.
+
+This family has no softmax-attention KV cache, so the paper's prefix-KV
+CushionCache does not apply directly. The implemented analogue
+("CushionState", see DESIGN.md §5) is a per-layer trainable *initial
+recurrent state* optimized with the same L_pred + λ·L_q objective; the greedy
+token-prefix search still applies (prefix tokens condition the state).
+
+All recurrences are stabilized in log space (exponential gating with max
+state m), matching the xLSTM paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import quantization as Q
+from repro.distributed.sharding import constrain
+from repro.models import common as C
+from repro.models import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+SITES = ("m_in", "m_out", "s_in", "s_out")
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    inner = cfg.ssm.expand * cfg.d_model if cfg.ssm else 2 * cfg.d_model
+    NH = cfg.n_heads
+    assert inner % NH == 0
+    return inner, NH, inner // NH
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    inner, NH, hd = dims(cfg)
+    D = cfg.d_model
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_qkv": C.dense_init(ks[0], D, 3 * inner, dt),
+        "w_if": (jax.random.normal(ks[1], (D, 2 * NH), jnp.float32)
+                 / np.sqrt(D)).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((NH,)),
+                                 jnp.linspace(3.0, 6.0, NH)]).astype(jnp.float32),
+        "w_o": C.dense_init(ks[2], D, inner, dt),
+        "w_proj": C.dense_init(ks[3], inner, D, dt,
+                               scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    _, NH, hd = dims(cfg)
+    return {"C": jnp.zeros((batch, NH, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, NH, hd), jnp.float32),
+            "m": jnp.full((batch, NH), -1e30, jnp.float32)}
+
+
+def _mlstm_qkvif(p: Params, x: Array, cfg: ModelConfig, qcfg, scales, taps,
+                 n_skip, site="m_in"):
+    inner, NH, hd = dims(cfg)
+    B, S, _ = x.shape
+    qkv = C.qlinear(x, p["w_qkv"], None, qcfg, scales, site, taps, n_skip)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shp = (B, S, NH, hd)
+    q = constrain(q.reshape(shp), "B", None, "M")
+    k = constrain(k.reshape(shp), "B", None, "M") / np.sqrt(hd)
+    v = constrain(v.reshape(shp), "B", None, "M")
+    gif = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li, lf_raw = jnp.split(gif, 2, axis=-1)               # (B,S,NH)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    og = jax.nn.sigmoid(x @ p["w_o"])                      # (B,S,inner)
+    return q, k, v, li, lf, og
+
+
+def _mlstm_mix(q: Array, k: Array, v: Array, li: Array, lf: Array,
+               init_state: Optional[Params], return_state: bool):
+    """Stabilized parallel (quadratic-in-S) mLSTM mixing.
+    q/k/v: (B,S,NH,hd); li/lf: (B,S,NH). Returns h (B,NH,S,hd) fp32
+    (+ final state)."""
+    B, S, NH, hd = q.shape
+    b = jnp.cumsum(lf, axis=1)                              # (B,S,NH)
+    bT = jnp.transpose(b, (0, 2, 1))                        # (B,NH,S)
+    liT = jnp.transpose(li, (0, 2, 1))
+    # logD[t,s] = b_t - b_s + li_s  (s <= t)
+    logD = bT[:, :, :, None] - bT[:, :, None, :] + liT[:, :, None, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(tri[None, None], logD, -jnp.inf)
+
+    if init_state is not None:
+        m0 = init_state["m"]                                # (B,NH)
+        C0 = init_state["C"]
+        n0 = init_state["n"]
+        inter_log = bT + m0[:, :, None]                     # (B,NH,S)
+    else:
+        inter_log = jnp.full_like(bT, -jnp.inf)
+
+    m_row = jnp.maximum(jnp.max(logD, axis=-1), inter_log)  # (B,NH,S)
+    m_row = jnp.maximum(m_row, -1e30)
+    Dm = jnp.exp(logD - m_row[..., None])                   # (B,NH,S,S)
+
+    qh = jnp.transpose(q, (0, 2, 1, 3)).astype(jnp.float32)  # (B,NH,S,hd)
+    kh = jnp.transpose(k, (0, 2, 1, 3)).astype(jnp.float32)
+    vh = jnp.transpose(v, (0, 2, 1, 3)).astype(jnp.float32)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) * Dm
+    num = jnp.einsum("bhts,bhsd->bhtd", scores, vh)
+    den = jnp.sum(scores, axis=-1)                           # (B,NH,S)
+    if init_state is not None:
+        iw = jnp.exp(inter_log - m_row)                      # (B,NH,S)
+        num = num + iw[..., None] * jnp.einsum("bhtd,bhde->bhte", qh, C0)
+        den = den + iw * jnp.einsum("bhtd,bhd->bht", qh, n0)
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+    h = num / norm[..., None]                                # (B,NH,S,hd)
+
+    if not return_state:
+        return h
+    # final state (stabilized)
+    bS = bT[:, :, -1]                                        # (B,NH)
+    w_log = bS[:, :, None] - bT + liT                        # (B,NH,S)
+    m_state = jnp.max(w_log, axis=-1)
+    if init_state is not None:
+        m_state = jnp.maximum(m_state, bS + init_state["m"])
+    w = jnp.exp(w_log - m_state[..., None])                  # (B,NH,S)
+    Cn = jnp.einsum("bhs,bhsd,bhse->bhde", w, kh, vh)
+    nn = jnp.einsum("bhs,bhsd->bhd", w, kh)
+    if init_state is not None:
+        iw0 = jnp.exp(bS + init_state["m"] - m_state)
+        Cn = Cn + iw0[..., None, None] * init_state["C"]
+        nn = nn + iw0[..., None] * init_state["n"]
+    return h, {"C": Cn, "n": nn, "m": m_state}
+
+
+# chunk length for the chunkwise-parallel form (perf iteration 1, see
+# EXPERIMENTS.md §Perf: the full quadratic form materializes O(S^2) decay
+# matrices and dominated the HBM roofline term at 32k context)
+from repro.flags import MLSTM_CHUNK
+
+
+def apply_mlstm(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                scales: Optional[Params], taps: Optional[Dict],
+                n_skip: int = 0, init_state: Optional[Params] = None,
+                return_state: bool = False, chunk: int = MLSTM_CHUNK):
+    """mLSTM block: one fused QKV/gate projection over the full sequence,
+    then chunkwise-parallel mixing — intra-chunk quadratic (MXU-friendly),
+    inter-chunk recurrent state carry (O(S*chunk) memory instead of
+    O(S^2))."""
+    B, S, D = x.shape
+    inner, NH, hd = dims(cfg)
+    q, k, v, li, lf, og = _mlstm_qkvif(p, x, cfg, qcfg, scales, taps, n_skip)
+
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        res = _mlstm_mix(q, k, v, li, lf, init_state, return_state)
+        h, state = res if return_state else (res, None)
+    else:
+        nc = S // chunk
+        st0 = init_state if init_state is not None else mlstm_state(cfg, B)
+        st0 = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), st0)
+
+        def body(st, xs):
+            qc, kc, vc, lic, lfc = xs
+            hc, st2 = _mlstm_mix(qc, kc, vc, lic, lfc, st, True)
+            return st2, hc
+
+        split = lambda a: jnp.moveaxis(
+            a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+        state, hs = jax.lax.scan(
+            body, st0, (split(q), split(k), split(v), split(li), split(lf)))
+        # hs: (nc, B, NH, chunk, hd) -> (B, NH, S, hd)
+        h = jnp.moveaxis(hs, 0, 2).reshape(B, NH, S, hd)
+
+    h = jnp.transpose(h, (0, 2, 1, 3)).reshape(B, S, inner)
+    h = (h.astype(x.dtype)) * og.astype(x.dtype)
+    h = constrain(h, "B", None, "M")
+    out = C.qlinear(h, p["w_proj"], None, qcfg, scales, "m_out", taps, n_skip)
+    if return_state:
+        return out, state
+    return out
+
+
+def decode_mlstm(p: Params, x: Array, state: Params, cfg: ModelConfig,
+                 qcfg: QuantConfig, scales: Optional[Params],
+                 taps: Optional[Dict] = None):
+    """x: (B,1,D). Sequential stabilized step."""
+    B = x.shape[0]
+    inner, NH, hd = dims(cfg)
+    q, k, v, li, lf, og = _mlstm_qkvif(p, x, cfg, qcfg, scales, taps, 0)
+    q, k, v = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # (B,NH,hd)
+    li, lf = li[:, 0], lf[:, 0]                                  # (B,NH)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m_new)
+    ip = jnp.exp(li - m_new)
+    Cn = fp[..., None, None] * state["C"] \
+        + ip[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    nn = fp[..., None] * state["n"] + ip[..., None] * k
+    den = jnp.einsum("bhd,bhd->bh", q, nn)
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", q, Cn) / norm[..., None]
+    h = h.reshape(B, 1, inner).astype(x.dtype) * og
+    out = C.qlinear(h, p["w_proj"], None, qcfg, scales, "m_out", taps)
+    return out, {"C": Cn, "n": nn, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    inner, NH, hd = dims(cfg)
+    D = cfg.d_model
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w": C.dense_init(ks[0], D, 4 * inner, dt),
+        "r": (jax.random.normal(ks[1], (NH, hd, 4 * hd), jnp.float32)
+              / np.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.zeros((4 * inner,), jnp.float32),
+        "w_proj": C.dense_init(ks[2], inner, D, dt,
+                               scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    _, NH, hd = dims(cfg)
+    z = lambda: jnp.zeros((batch, NH, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, NH, hd), -1e30, jnp.float32)}
+
+
+def _slstm_step(p: Params, wx_t: Array, state: Params, NH: int, hd: int):
+    """wx_t: (B, 4*inner) precomputed W x_t + b. Returns (h_flat, state)."""
+    B = wx_t.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", state["h"], p["r"])     # (B,NH,4*hd)
+    zall = wx_t.reshape(B, 4, NH, hd).transpose(0, 2, 1, 3).reshape(B, NH, 4 * hd) \
+        + rec
+    zi, zf, zz, zo = jnp.split(zall, 4, axis=-1)             # (B,NH,hd)
+    lf = jax.nn.log_sigmoid(zf)
+    li = zi
+    m_new = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp * state["c"] + ip * jnp.tanh(zz)
+    n = fp * state["n"] + ip
+    h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+    return h, {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                scales: Optional[Params], taps: Optional[Dict],
+                n_skip: int = 0, init_state: Optional[Params] = None,
+                return_state: bool = False):
+    B, S, D = x.shape
+    inner, NH, hd = dims(cfg)
+    wx = C.qlinear(x, p["w"], None, qcfg, scales, "s_in", taps, n_skip) \
+        .astype(jnp.float32) + p["b"]
+    state = init_state if init_state is not None else slstm_state(cfg, B)
+    state = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (B,) + a.shape).astype(jnp.float32)
+        if a.ndim == 2 else a.astype(jnp.float32), state)
+
+    def step(st, wx_t):
+        h, st = _slstm_step(p, wx_t, st, NH, hd)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state, jnp.transpose(wx, (1, 0, 2)))
+    hs = jnp.transpose(hs, (1, 0, 2, 3)).reshape(B, S, inner).astype(x.dtype)
+    hs = constrain(hs, "B", None, "M")
+    out = C.qlinear(hs, p["w_proj"], None, qcfg, scales, "s_out", taps, n_skip)
+    if return_state:
+        return out, state
+    return out
+
+
+def decode_slstm(p: Params, x: Array, state: Params, cfg: ModelConfig,
+                 qcfg: QuantConfig, scales: Optional[Params],
+                 taps: Optional[Dict] = None):
+    B = x.shape[0]
+    inner, NH, hd = dims(cfg)
+    wx = C.qlinear(x, p["w"], None, qcfg, scales, "s_in", taps) \
+        .astype(jnp.float32) + p["b"]
+    h, state = _slstm_step(p, wx[:, 0], state, NH, hd)
+    h = h.reshape(B, 1, inner).astype(x.dtype)
+    out = C.qlinear(h, p["w_proj"], None, qcfg, scales, "s_out", taps)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Full LM: scan over (mLSTM, sLSTM) pairs
+# ---------------------------------------------------------------------------
+
+def n_pairs(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % 2 == 0, "xlstm stack expects even layer count"
+    return cfg.n_layers // 2
+
+
+def pair_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln_m": C.norm_init(cfg), "mlstm": mlstm_init(k1, cfg),
+            "ln_s": C.norm_init(cfg), "slstm": slstm_init(k2, cfg)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    k_emb, k_layers = jax.random.split(rng)
+    P = n_pairs(cfg)
+    layers = jax.vmap(lambda k: pair_init(k, cfg))(jax.random.split(k_layers, P))
+    p = C.embed_init(k_emb, cfg)
+    p["layers"] = layers
+    p["ln_f"] = C.norm_init(cfg)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0,
+               dtype=None) -> Params:
+    """State 'cache': stacked over pairs. max_seq unused (O(1) state)."""
+    P = n_pairs(cfg)
+    m = jax.vmap(lambda _: mlstm_state(cfg, batch))(jnp.arange(P))
+    s = jax.vmap(lambda _: slstm_state(cfg, batch))(jnp.arange(P))
+    return {"m": m, "s": s}
+
+
+def cache_roles(cfg: ModelConfig) -> Params:
+    """Recurrent-state sharding: batch on B, the head-dim on model."""
+    return {"m": {"C": (None, "B", None, None, "M"),
+                  "n": (None, "B", None, "M"),
+                  "m": (None, "B", None)},
+            "s": {"c": (None, "B", None, "M"), "n": (None, "B", None, "M"),
+                  "h": (None, "B", None, "M"), "m": (None, "B", None, "M")}}
+
+
+def cushion_zeros(cfg: ModelConfig, m: int, dtype=jnp.float32) -> Params:
+    """CushionState: trainable initial state (batch-free; broadcast at use).
+    `m` (prefix length) has no direct meaning here; state size is fixed."""
+    P = n_pairs(cfg)
+    inner, NH, hd = dims(cfg)
+    return {"state": {
+        "m": {"C": jnp.zeros((P, NH, hd, hd), dtype),
+              "n": jnp.zeros((P, NH, hd), dtype),
+              "m": jnp.full((P, NH), -30.0, dtype)},
+        "s": {"c": jnp.zeros((P, NH, hd), dtype),
+              "n": jnp.zeros((P, NH, hd), dtype),
+              "h": jnp.zeros((P, NH, hd), dtype),
+              "m": jnp.full((P, NH, hd), -30.0, dtype)},
+    }}
+
+
+def _bcast_state(st: Params, B: int) -> Params:
+    """Broadcast a batch-free cushion state to batch B."""
+    def f(a):
+        return jnp.broadcast_to(a[:, None], (a.shape[0], B) + a.shape[1:])
+    return jax.tree_util.tree_map(f, st)
+
+
+def forward(params: Params, tokens: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales: Optional[Params] = None,
+            cushion: Optional[Params] = None, collect: bool = False,
+            n_skip: int = 0, prepend_embeds: Optional[Array] = None,
+            remat: bool = True, return_cache: bool = False):
+    x = C.embed_tokens(params, tokens, cfg)
+    if prepend_embeds is not None:
+        x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
+    B = x.shape[0]
+    P = n_pairs(cfg)
+    lscales = ({s: scales[s] for s in SITES} if scales is not None
+               else C.placeholder_scales(SITES, P))
+    if cushion is not None:
+        init_st = _bcast_state(cushion["state"], B)
+    else:
+        init_st = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((0,)), init_cache(cfg, B))  # placeholder
+        init_st = None
+
+    def body(h, xs):
+        if init_st is None:
+            lp, lsc = xs
+            st_m = st_s = None
+        else:
+            lp, lsc, st = xs
+            st_m, st_s = st["m"], st["s"]
+        taps: Optional[Dict] = {} if collect else None
+        if collect:
+            taps["block_in"] = Q.site_stats(h, n_skip)
+        hn = C.apply_norm(lp["ln_m"], h, cfg)
+        o, new_m = apply_mlstm(lp["mlstm"], hn, cfg, qcfg, lsc, taps, n_skip,
+                               init_state=st_m, return_state=True)
+        h = h + o
+        hn = C.apply_norm(lp["ln_s"], h, cfg)
+        o, new_s = apply_slstm(lp["slstm"], hn, cfg, qcfg, lsc, taps, n_skip,
+                               init_state=st_s, return_state=True)
+        h = constrain(h + o, "B")
+        return h, ((taps if collect else {}), {"m": new_m, "s": new_s})
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], lscales) if init_st is None \
+        else (params["layers"], lscales, init_st)
+    x, (layer_taps, states) = jax.lax.scan(body, x, xs)
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    head_taps: Optional[Dict] = {} if collect else None
+    logits = C.lm_head(params, x, cfg, qcfg, scales, head_taps, n_skip)
+    taps: Dict = {}
+    if collect:
+        taps = {"layers": layer_taps, **(head_taps or {}),
+                "final_in": Q.site_stats(x, n_skip)}
+    if return_cache:
+        return logits, taps, states
+    return logits, taps
+
+
+def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales: Optional[Params] = None,
+            cushion: Optional[Params] = None,
+            prepend_embeds: Optional[Array] = None, remat: bool = False):
+    logits, _, states = forward(params, tokens, cfg, qcfg, scales=scales,
+                                cushion=cushion, remat=remat,
+                                prepend_embeds=prepend_embeds,
+                                return_cache=True)
+    S = tokens.shape[1] + (0 if prepend_embeds is None
+                           else prepend_embeds.shape[1])
+    return logits[:, -1:], states, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params: Params, token: Array, pos: Array, cache: Params,
+                cfg: ModelConfig, qcfg: QuantConfig, *,
+                scales: Optional[Params] = None):
+    x = C.embed_tokens(params, token[:, None], cfg)
+    P = n_pairs(cfg)
+    lscales = ({s: scales[s] for s in SITES} if scales is not None
+               else C.placeholder_scales(SITES, P))
+
+    def body(h, xs):
+        lp, lsc, st = xs
+        hn = C.apply_norm(lp["ln_m"], h, cfg)
+        o, new_m = decode_mlstm(lp["mlstm"], hn, st["m"], cfg, qcfg, lsc)
+        h = h + o
+        hn = C.apply_norm(lp["ln_s"], h, cfg)
+        o, new_s = decode_slstm(lp["slstm"], hn, st["s"], cfg, qcfg, lsc)
+        h = h + o
+        return h, {"m": new_m, "s": new_s}
+
+    x, states = jax.lax.scan(body, x, (params["layers"], lscales, cache))
+    x = C.apply_norm(params["ln_f"], x, cfg)
+    logits = C.lm_head(params, x, cfg, qcfg, scales, None)
+    return logits[:, 0], states
+
+
+def loss_fn(params: Params, tokens: Array, labels: Array, cfg: ModelConfig,
+            qcfg: QuantConfig, *, scales=None, cushion=None,
+            collect: bool = False, n_skip: int = 0, remat: bool = True,
+            lam: float = 0.0):
+    logits, taps = forward(params, tokens, cfg, qcfg, scales=scales,
+                           cushion=cushion, collect=collect or lam > 0,
+                           n_skip=n_skip, remat=remat)
+    if n_skip:
+        logits = logits[:, n_skip:]
+        labels = labels[:, n_skip:]
+    ce = C.cross_entropy(logits, labels)
+    loss = ce
+    aux = {"ce": ce, "taps": taps}
+    if lam > 0 or collect:
+        qerr = T.total_qerr(taps)
+        aux["qerr"] = qerr
+        if lam > 0:
+            loss = loss + lam * qerr
+    return loss, aux
+
+
+def placeholder_all_scales(cfg: ModelConfig) -> Params:
+    sc = C.placeholder_scales(SITES, n_pairs(cfg))
+    sc["head"] = Q.SiteScale(scale=jnp.ones(()), zero=jnp.zeros(()))
+    return sc

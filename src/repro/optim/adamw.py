@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm gradient clipping and
+pluggable LR schedules. Pure-pytree implementation (no optax dependency);
+optimizer state mirrors the param tree so it inherits the param shardings
+(ZeRO-1: states live sharded exactly like their FSDP-sharded params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # decay mask: paths matching these substrings get no weight decay
+    no_decay: tuple = ("ln", "norm", "bias", "b_if", "dt_b", "A_log",
+                       "Dskip", "/g", "/b")
+
+    def init(self, params: Any) -> AdamWState:
+        z = lambda p: jax.tree_util.tree_map(
+            lambda a: jnp.zeros_like(a, dtype=jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=z(params),
+                          nu=z(params))
+
+    def _decay_mask(self, params: Any) -> Any:
+        from repro.distributed.sharding import tree_paths
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda p: not any(s in p for s in self.no_decay), paths)
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        # global-norm clip
+        if self.grad_clip > 0:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            gn = jnp.zeros(())
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+
+        step = state.step + 1
+        lr_t = self.lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        mask = self._decay_mask(params)
+
+        def upd(g, m, v, p, do_decay):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if do_decay and self.weight_decay > 0:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_mask = treedef.flatten_up_to(mask)
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p, dk in zip(flat_g, flat_m, flat_v, flat_p, flat_mask):
+            pn, mn, vn = upd(g, m, v, p, dk)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+        unf = treedef.unflatten
+        return unf(new_p), AdamWState(step=step, mu=unf(new_m),
+                                      nu=unf(new_v)), {"grad_norm": gn,
+                                                       "lr": lr_t}
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(peak: float, warmup: int, total: int,
+              floor: float = 0.1) -> Callable:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(s < warmup, warm, cos)
+    return f

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run launcher sets its
+# own 512-device flag before importing jax — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

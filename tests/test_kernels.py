@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps, interpret-mode vs pure-jnp oracle."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.act_quant import act_quant_ptoken, act_quant_static
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.w8a8_matmul import w8a8_matmul
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 384, 128, 128, 256),
+    (128, 256, 512, 64, 512, 128),
+])
+def test_w8a8_matmul_shapes(M, K, N, bm, bn, bk):
+    rng = np.random.RandomState(M + K + N)
+    x = jnp.asarray(rng.randint(-127, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.randint(-127, 128, (K, N)), jnp.int8)
+    s_x, z_x, s_w = 0.013, -5.0, 0.02
+    out = w8a8_matmul(x, w, s_x, z_x, s_w, bm=bm, bn=bn, bk=bk,
+                      interpret=True)
+    ref = R.w8a8_matmul_ref(x, w, jnp.float32(s_x), jnp.float32(z_x),
+                            jnp.float32(s_w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,D", [(128, 256), (256, 960)])
+def test_act_quant_static_sweep(M, D, dtype):
+    rng = np.random.RandomState(M + D)
+    x = jnp.asarray(rng.randn(M, D) * 4, dtype)
+    s, z = 0.06, 17.0
+    out = act_quant_static(x, s, z, bm=128, interpret=True)
+    ref = R.act_quant_static_ref(x.astype(jnp.float32), jnp.float32(s),
+                                 jnp.float32(z))
+    # bf16 rounding can flip values at the .5 boundary: allow off-by-one
+    diff = np.abs(np.asarray(out, np.int32) - np.asarray(ref, np.int32))
+    assert diff.max() <= (0 if dtype == jnp.float32 else 1)
+
+
+@pytest.mark.parametrize("M,D", [(128, 128), (256, 512)])
+def test_act_quant_ptoken_sweep(M, D):
+    rng = np.random.RandomState(M * D)
+    x = jnp.asarray(rng.randn(M, D).astype(np.float32) * 2)
+    out, s, z = act_quant_ptoken(x, bm=128, interpret=True)
+    ref, rs, rz = R.act_quant_ref(x, per_token=True)
+    # fp associativity at the .5 rounding boundary: allow off-by-one
+    diff = np.abs(np.asarray(out, np.int32) - np.asarray(ref, np.int32))
+    assert diff.max() <= 1 and (diff != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,S,T_extra,hd,prefix,causal", [
+    (1, 2, 64, 0, 64, 0, True),
+    (2, 3, 100, 7, 64, 7, True),     # unaligned + cushion prefix
+    (1, 4, 128, 16, 128, 16, True),
+    (2, 2, 96, 0, 32, 0, False),
+])
+def test_flash_attention_sweep(B, H, S, T_extra, hd, prefix, causal):
+    rng = np.random.RandomState(S + hd)
+    q = jnp.asarray(rng.randn(B, H, S, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, H, S + T_extra, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, H, S + T_extra, hd).astype(np.float32))
+    out = flash_attention(q, k, v, causal=causal, prefix_len=prefix,
+                          bq=32, bkv=64, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=causal, prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 2, 64, 64), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 64, 64), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 64, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=32, bkv=32,
+                          interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_prefix_attends_fully():
+    """Every query must see the cushion block: with a huge prefix value the
+    output should be dominated by prefix V rows for all positions."""
+    B, H, S, hd, m = 1, 1, 16, 8, 2
+    q = jnp.ones((B, H, S, hd))
+    k = jnp.zeros((B, H, m + S, hd)).at[:, :, :m].set(10.0)
+    v = jnp.zeros((B, H, m + S, hd)).at[:, :, :m].set(1.0)
+    out = flash_attention(q, k, v, causal=True, prefix_len=m, bq=8, bkv=8,
+                          interpret=True)
+    assert float(out.min()) > 0.95
+
+
+def test_qdot_pallas_matches_int8_reference():
+    from repro.configs import QuantConfig
+    from repro.core import quantization as Q
+    from repro.kernels.ops import qdot_pallas
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(2, 37, 256).astype(np.float32))
+    w = jnp.asarray(rng.randn(256, 128).astype(np.float32) * 0.1)
+    qcfg = QuantConfig(mode="pt_static", true_int8=True)
+    scale, zero = Q.params_from_minmax(jnp.min(x), jnp.max(x), 8, False)
+    site = Q.SiteScale(scale=scale, zero=zero)
+    a = qdot_pallas(x, w, qcfg, site)
+    b = Q.true_int_dot(x, w, qcfg, site)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-4)

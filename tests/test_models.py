@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests (reduced configs) + serving-path
+equivalence invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, QuantConfig, get_config, reduced
+from repro.models.registry import build
+
+QN = QuantConfig(mode="none")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch, rng):
+    """One forward + train step on CPU: output shapes, no NaNs (assignment
+    requirement for every assigned architecture)."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 32)
+    logits, _ = api.forward(params, batch, QN)
+    text_len = api.text_len(32)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any())
+    loss, aux = api.loss_fn(params, batch, QN)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: api.loss_fn(p, batch, QN)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "olmoe-1b-7b",
+                                  "jamba-v0.1-52b", "xlstm-350m",
+                                  "whisper-base", "internvl2-26b"])
+def test_prefill_decode_matches_forward(arch, rng):
+    """Serving path (prefill + stepwise decode) reproduces the teacher-forced
+    forward logits, including with a cushion prefix."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 16)
+    cushion = None
+    if arch != "internvl2-26b":
+        cushion = jax.tree_util.tree_map(
+            lambda a: a * 0 + 0.03, api.cushion_zeros(4))
+    full, _ = api.forward(params, batch, QN, cushion=cushion)
+    text_len = batch["tokens"].shape[1]
+    split = text_len // 2
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :split]
+    cache = api.init_cache(2, 64)
+    lg, cache, pos = api.prefill(params, pre_batch, cache, QN,
+                                 cushion=cushion)
+    offset = full.shape[1] - text_len     # vlm: patches precede text
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, offset + split - 1]),
+                               rtol=5e-3, atol=5e-3)
+    for i in range(split, min(split + 4, text_len)):
+        lg, cache = api.decode_step(params, batch["tokens"][:, i], pos,
+                                    cache, QN)
+        pos = pos + 1
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, offset + i]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "qwen1.5-0.5b"])
+def test_cushion_kv_equivalence(arch, rng):
+    """Paper eq. (8): forward conditioned on the extracted prefix KV equals
+    forward over the concatenated token sequence, at token positions."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 12)
+    prefix = jnp.asarray([5, 9, 3], jnp.int32)
+    with_tokens, _ = api.forward_with_token_prefix(params, prefix, batch, QN)
+    cushion = api.extract_cushion(params, prefix, batch, QN)
+    with_kv, _ = api.forward(params, batch, QN, cushion=cushion)
+    np.testing.assert_allclose(np.asarray(with_tokens[:, 3:]),
+                               np.asarray(with_kv), rtol=2e-3, atol=2e-3)
+
+
+def test_quantized_forward_modes(rng):
+    cfg = reduced(get_config("smollm-360m"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 16)
+    ref, _ = api.forward(params, batch, QN)
+    for mode in ["pt_dynamic", "ptoken_dynamic"]:
+        out, _ = api.forward(params, batch, QuantConfig(mode=mode))
+        rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+        assert rel < 0.2, (mode, rel)
+
+
+def test_taps_structure(rng):
+    cfg = reduced(get_config("smollm-360m"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 16)
+    _, taps = api.forward(params, batch, QuantConfig(mode="pt_dynamic"),
+                          collect=True)
+    assert "layers" in taps and "qkv" in taps["layers"]
+    assert taps["layers"]["qkv"]["qerr"].shape == (cfg.n_layers,)
+    assert taps["layers"]["qkv"]["absmax_ch"].shape == (cfg.n_layers,
+                                                        cfg.d_model)

@@ -1,0 +1,178 @@
+"""Property tests for the quantization core (paper §3)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import QuantConfig
+from repro.core import quantization as Q
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+
+floats = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False,
+                   width=32)
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2,
+                                                          max_dims=3,
+                                                          max_side=16),
+                             elements=floats),
+                  st.sampled_from([4, 6, 8]),
+                  st.booleans())
+def test_quant_roundtrip_error_bound(x, bits, symmetric):
+    """|x - dq(q(x))| <= scale/2 elementwise within the clip range."""
+    x = jnp.asarray(x)
+    mn, mx = Q.act_minmax(x, per_token=False)
+    scale, zero = Q.params_from_minmax(mn, mx, bits, symmetric)
+    xq = Q.dequantize(Q.quantize(x, scale, zero, bits, symmetric),
+                      scale, zero)
+    # inside the representable range the error is at most half a step
+    lo = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[0]), scale, zero)
+    hi = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[1]), scale, zero)
+    inside = (x >= lo) & (x <= hi)
+    err = jnp.abs(x - xq)
+    assert np.all(np.asarray(err[inside]) <= float(scale) / 2 + 1e-4)
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.float32, (8, 16), elements=floats),
+                  st.sampled_from([6, 8]))
+def test_fake_quant_idempotent(x, bits):
+    x = jnp.asarray(x)
+    mn, mx = Q.act_minmax(x, per_token=False)
+    scale, zero = Q.params_from_minmax(mn, mx, bits, False)
+    y1 = Q.fake_quant(x, scale, zero, bits, False)
+    y2 = Q.fake_quant(y1, scale, zero, bits, False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ste_gradient_identity_in_range():
+    x = jnp.linspace(-0.9, 0.9, 16)
+    scale = jnp.asarray(0.1)
+    zero = jnp.asarray(0.0)
+    g = jax.grad(lambda x: jnp.sum(Q.fake_quant(x, scale, zero, 8, True)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(16), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["pt_dynamic", "ptoken_dynamic"])
+def test_qdot_close_to_fp(mode):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 32).astype(np.float32) * 0.1)
+    qcfg = QuantConfig(mode=mode)
+    out = Q.qdot(x, w, qcfg)
+    rel = np.abs(np.asarray(out - x @ w)).max() / np.abs(np.asarray(x @ w)).max()
+    assert rel < 0.05
+
+
+def test_true_int8_matches_fake_quant():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 32).astype(np.float32) * 0.1)
+    mn, mx = Q.act_minmax(x, False)
+    scale, zero = Q.params_from_minmax(mn, mx, 8, False)
+    site = Q.SiteScale(scale=scale, zero=zero)
+    a = Q.qdot(x, w, QuantConfig(mode="pt_static", true_int8=True,
+                                 w_group=0), site)
+    b = Q.qdot(x, w, QuantConfig(mode="pt_static", true_int8=False,
+                                 w_group=0), site)
+    # weight quant granularity differs (per-tensor vs per-channel-group);
+    # bound loosely
+    rel = np.abs(np.asarray(a - b)).max() / np.abs(np.asarray(b)).max()
+    assert rel < 0.1
+
+
+def test_outlier_blows_up_per_tensor_quant():
+    """The paper's core premise: one outlier destroys per-tensor scales."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(16, 64).astype(np.float32)
+    clean_err = float(Q.site_qerr(jnp.asarray(x),
+                                  QuantConfig(mode="pt_dynamic"), None))
+    x_out = x.copy()
+    x_out[3, 7] = 10_000.0
+    dirty_err = float(Q.site_qerr(jnp.asarray(x_out),
+                                  QuantConfig(mode="pt_dynamic"), None))
+    assert dirty_err > 100 * clean_err
+
+
+def test_per_token_robust_to_token_outlier():
+    """A token outlier wrecks the *other* tokens under per-tensor scales but
+    not under per-token scales (the paper's granularity comparison)."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(16, 64).astype(np.float32)
+    x_out = x.copy()
+    x_out[3, :] *= 10_000.0
+    xj = jnp.asarray(x_out)
+
+    def clean_rows_err(mode):
+        per_token = mode == "ptoken_dynamic"
+        mn, mx = Q.act_minmax(xj, per_token)
+        scale, zero = Q.params_from_minmax(mn, mx, 8, False)
+        xq = Q.dequantize(Q.quantize(xj, scale, zero, 8, False), scale, zero)
+        err = np.asarray(jnp.square(xj - xq))
+        return err[np.arange(16) != 3].sum()
+
+    assert clean_rows_err("ptoken_dynamic") < clean_rows_err("pt_dynamic") / 10
+
+
+def test_scales_from_stats_shapes():
+    stats = {"a": {"amin": jnp.zeros((4,)), "amax": jnp.ones((4,)),
+                   "absmax_ch": jnp.ones((4, 8))}}
+    scales = Q.scales_from_stats(stats, QuantConfig(mode="pt_static"))
+    assert scales["a"].scale.shape == (4,)
+    assert scales["a"].zero.shape == (4,)
+
+
+def test_prequantized_int_dot_matches_true_int_dot():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(6, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 32).astype(np.float32) * 0.1)
+    qcfg = QuantConfig(mode="pt_static", true_int8=True)
+    mn, mx = Q.act_minmax(x, False)
+    scale, zero = Q.params_from_minmax(mn, mx, 8, False)
+    site = Q.SiteScale(scale=scale, zero=zero)
+    a = Q.qdot(x, Q.prequantize(w, qcfg), qcfg, site)
+    b = Q.true_int_dot(x, w, qcfg, site)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_prequantize_tree_selects_qdot_weights_only():
+    from repro.configs import get_config
+    from repro.models.registry import build
+    import jax
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    p = api.init_params(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(mode="pt_static", true_int8=True)
+    pq = Q.prequantize_tree(p, qcfg)
+    assert "w_int" in pq["layers"]["attn"]["wqkv"]
+    assert pq["layers"]["attn"]["wqkv"]["w_int"].dtype == jnp.int8
+    # embeddings untouched
+    assert not isinstance(pq["embed"]["w"], dict)
+
+
+def test_prequantized_forward_close_to_fp():
+    from repro.configs import get_config
+    from repro.models.registry import build
+    from repro.models import transformer as T
+    import jax
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    p = api.init_params(jax.random.PRNGKey(0))
+    b = api.make_batch(jax.random.PRNGKey(1), 2, 16)
+    ref, _ = api.forward(p, b, QuantConfig(mode="none"))
+    qcfg = QuantConfig(mode="pt_static", true_int8=True)
+    scales = T.placeholder_all_scales(cfg)
+    # calibrated-ish scales: use dynamic stats per site via calibration
+    from repro.core.calibration import calibrate
+    scales, _ = calibrate(api, p, [b], qcfg)
+    pq = Q.prequantize_tree(p, qcfg)
+    out, _ = api.forward(pq, b, qcfg, scales=scales)
+    rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.25, rel

@@ -1,0 +1,119 @@
+"""End-to-end behaviour tests: train -> calibrate -> quantize -> serve,
+plus the chunked-flash-attention equivalence the long-context paths rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CushionConfig, QuantConfig, get_config
+from repro.core.calibration import calibrate
+from repro.data.pipeline import Pipeline, SyntheticCorpus
+from repro.models import common as C
+from repro.models.registry import build
+from repro.serving.engine import Engine
+from repro.train.trainer import eval_ppl, make_train_step, make_optimizer
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train paper_tiny briefly so perplexity deltas are meaningful."""
+    from repro.configs import RunConfig
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    run = RunConfig(model=cfg, seq_len=64, global_batch=8, lr=3e-3,
+                    train_steps=150, warmup_steps=10)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    pipe = Pipeline(corpus, batch=8, seq_len=64, seed=0)
+    params = api.init_params(jax.random.PRNGKey(0))
+    opt = make_optimizer(run)
+    st = opt.init(params)
+    step = jax.jit(make_train_step(api, run, opt))
+    for i in range(150):
+        b = {k: jnp.asarray(v) for k, v in pipe.get_batch(i).items()}
+        params, st, m = step(params, st, b)
+    return api, params, pipe
+
+
+def test_training_learns(trained):
+    api, params, pipe = trained
+    evalb = [{k: jnp.asarray(v) for k, v in pipe.get_batch(9000 + i).items()}
+             for i in range(4)]
+    ppl = eval_ppl(api, params, evalb, QuantConfig(mode="none"))
+    assert ppl < 100, ppl    # vocab 512; untrained ~512
+
+
+def test_static_quant_with_calibration(trained):
+    api, params, pipe = trained
+    qs = QuantConfig(mode="pt_static")
+    cal = [{k: jnp.asarray(v) for k, v in pipe.get_batch(8000 + i).items()}
+           for i in range(3)]
+    scales, _ = calibrate(api, params, cal, qs)
+    evalb = [{k: jnp.asarray(v) for k, v in pipe.get_batch(9000 + i).items()}
+             for i in range(4)]
+    ppl_fp = eval_ppl(api, params, evalb, QuantConfig(mode="none"))
+    ppl_q = eval_ppl(api, params, evalb, qs, scales=scales)
+    assert ppl_q < ppl_fp * 3    # W8A8 shouldn't destroy a tiny clean model
+
+
+def test_engine_generates(trained):
+    api, params, pipe = trained
+    b = {k: jnp.asarray(v) for k, v in pipe.get_batch(7000).items()}
+    eng = Engine(api, params, QuantConfig(mode="none"), max_seq=128)
+    res = eng.generate(b, 6)
+    assert res.tokens.shape == (8, 6)
+    assert res.ttft_ms > 0 and res.tpot_ms > 0
+
+
+def test_engine_with_cushion_and_static_quant(trained):
+    api, params, pipe = trained
+    qs = QuantConfig(mode="pt_static")
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2], jnp.int32),
+                                  None, QuantConfig(mode="none"))
+    cal = [{k: jnp.asarray(v) for k, v in pipe.get_batch(8000 + i).items()}
+           for i in range(2)]
+    scales, _ = calibrate(api, params, cal, qs, cushion=cushion)
+    b = {k: jnp.asarray(v) for k, v in pipe.get_batch(7001).items()}
+    eng = Engine(api, params, qs, cushion=cushion, scales=scales,
+                 max_seq=128)
+    res = eng.generate(b, 4)
+    assert res.tokens.shape == (8, 4)
+
+
+@pytest.mark.parametrize("S,T,prefix", [(64, 64, 0), (100, 107, 7)])
+def test_flash_jnp_equals_dense(S, T, prefix):
+    cfg = get_config("paper_tiny")
+    rng = np.random.RandomState(S)
+    q = jnp.asarray(rng.randn(2, S, 8, 32).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, T, 4, 32).astype(np.float32))
+    v = jnp.asarray(rng.randn(2, T, 4, 32).astype(np.float32))
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = (j < prefix) | (j <= i + prefix)
+    ref = C._sdpa_dense(q, k, v, mask, cfg)
+    out = C.flash_attention_jnp(q, k, v, cfg, causal=True, prefix_len=prefix,
+                                q_chunk=32, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_train_resume_determinism(tmp_path):
+    """Checkpoint/restart produces the same params as an uninterrupted run
+    (fault-tolerance requirement)."""
+    from repro.launch.train import main as train_main
+    out1 = train_main(["--arch", "paper_tiny", "--steps", "12", "--batch",
+                       "2", "--seq", "32", "--save-every", "6",
+                       "--ckpt-dir", str(tmp_path / "a")])
+    # interrupted run: 6 steps, then resume to 12
+    train_main(["--arch", "paper_tiny", "--steps", "6", "--batch", "2",
+                "--seq", "32", "--save-every", "6",
+                "--ckpt-dir", str(tmp_path / "b")])
+    out2 = train_main(["--arch", "paper_tiny", "--steps", "12", "--batch",
+                       "2", "--seq", "32", "--save-every", "6",
+                       "--ckpt-dir", str(tmp_path / "b"), "--resume"])
+    p1 = out1[0]["params"]
+    p2 = out2[0]["params"]
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
