@@ -48,18 +48,73 @@ def kernel_microbench():
          "prefix flash oracle")
 
 
+def decode_bench():
+    """Serving decode-path bench: TPOT at several cache fills, fp vs int8
+    KV, scanned loop vs legacy per-token host loop. Emits CSV rows and the
+    ``results/BENCH_decode.json`` trajectory artifact future PRs regress
+    against."""
+    import json
+    import os
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.configs import QuantConfig, get_config
+    from repro.models.registry import build
+    from repro.serving.engine import Engine
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    n_gen, B = 16, 2
+    points = []
+    for fill in (64, 192):
+        rs = np.random.RandomState(fill)
+        batch = {"tokens": jnp.asarray(
+            rs.randint(0, cfg.vocab_size, (B, fill)), jnp.int32)}
+        for kv_dtype in (None, "int8"):
+            eng = Engine(api, params, QuantConfig(mode="none"),
+                         max_seq=fill + n_gen + 8, kv_dtype=kv_dtype)
+            eng.generate(batch, n_gen)            # warm/compile
+            res = eng.generate(batch, n_gen)
+            eng.generate_py(batch, n_gen)         # warm/compile
+            res_py = eng.generate_py(batch, n_gen)
+            tag = f"decode_fill{fill}_{kv_dtype or 'fp'}"
+            emit(f"{tag}_tpot", res.tpot_ms * 1e3, "scanned decode loop")
+            emit(f"{tag}_tpot_pyloop", res_py.tpot_ms * 1e3,
+                 "per-token host-sync loop")
+            points.append({"fill": fill, "kv_dtype": kv_dtype or "fp",
+                           "batch": B, "n_gen": n_gen,
+                           "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms,
+                           "tpot_ms_pyloop": res_py.tpot_ms})
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_decode.json"), "w") as f:
+        json.dump({"bench": "decode", "points": points}, f, indent=1)
+
+
+EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
+                 "decode_bench": decode_bench}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single table function by name")
+                    help="run a single bench/table function by name")
     ap.add_argument("--skip-paper", action="store_true",
                     help="kernel microbenches only (fast)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.only in EXTRA_BENCHES:
+        EXTRA_BENCHES[args.only]()
+        return
     kernel_microbench()
     if args.skip_paper:
         return
+    if not args.only:
+        decode_bench()
     from benchmarks import paper_tables as PT
     fns = PT.ALL
     if args.only:

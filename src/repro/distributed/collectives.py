@@ -17,6 +17,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: the top-level alias (with its
+    `check_vma` kwarg) appeared after 0.4.x; older releases expose
+    jax.experimental.shard_map with `check_rep` instead."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     """All-reduce-mean with int8 payload + per-tensor fp32 scale.
 
@@ -49,11 +61,8 @@ def dp_train_step_compressed(grad_fn: Callable, mesh: Mesh,
         return loss, grads
 
     batch_spec = P(axis_name)
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), batch_spec),
-        out_specs=(P(), P()),
-        check_vma=False)
+    return shard_map_compat(local, mesh, in_specs=(P(), batch_spec),
+                            out_specs=(P(), P()))
 
 
 def collective_bytes_of_hlo(hlo_text: str) -> dict:

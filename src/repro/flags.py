@@ -9,3 +9,8 @@ MLSTM_CHUNK = int(os.environ.get("REPRO_MLSTM_CHUNK", "256"))
 
 # decode attention: keep KV-sequence axis sharded (split-KV / flash-decoding)
 DECODE_SPLIT_KV = os.environ.get("REPRO_SPLIT_KV", "1") != "0"
+
+# decode attention kernel routing: "auto" = Pallas split-KV flash-decode on
+# TPU backends, jnp oracle elsewhere; "pallas" / "jnp" force either path
+# (the forced Pallas path runs in interpret mode off-TPU — validation only).
+DECODE_KERNEL = os.environ.get("REPRO_DECODE_KERNEL", "auto")

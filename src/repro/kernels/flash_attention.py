@@ -36,8 +36,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)            # (bq, hd)
-    k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
-    v = v_ref[0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)         # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
@@ -71,13 +71,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, prefix_len: int = 0,
                     bq: int = 256, bkv: int = 512,
                     interpret: bool = False) -> jax.Array:
-    """q: (B,H,S,hd); k/v: (B,H,T,hd). Returns (B,H,S,hd).
+    """q: (B,H,S,hd); k/v: (B,Kh,T,hd) with Kh | H. Returns (B,H,S,hd).
+
+    GQA is native: the kv-head for grid row b is picked in the k/v BlockSpec
+    index maps ((b % H) // G), so grouped caches are streamed HBM->VMEM at
+    their stored Kh-head size — never expanded G× in HBM.
 
     VMEM working set: q/k/v/p tiles + fp32 accumulator
       bq*hd + 2*bkv*hd + bq*bkv + bq*hd(fp32) ≈ 1.1 MB at (256, 512, 128).
     """
     B, H, S, hd = q.shape
-    T = k.shape[2]
+    Kh, T = k.shape[1], k.shape[2]
+    G = H // Kh
     bq = min(bq, S)
     bkv = min(bkv, T)
     Sp = -(-S // bq) * bq
@@ -89,8 +94,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
     n_kv = Tp // bkv
     qf = q.reshape(B * H, Sp, hd)
-    kf = k.reshape(B * H, Tp, hd)
-    vf = v.reshape(B * H, Tp, hd)
     scale = 1.0 / np.sqrt(hd)
 
     out = pl.pallas_call(
@@ -100,8 +103,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         grid=(B * H, Sp // bq, n_kv),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, i, j: (b // H, (b % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, i, j: (b // H, (b % H) // G, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
@@ -109,5 +114,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, hd), jnp.float32)],
         interpret=interpret,
-    )(qf, kf, vf)
+    )(qf, k, v)
     return out.reshape(B, H, Sp, hd)[:, :, :S]

@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: split-KV (flash-decoding style) single-query attention
+for the serving decode hot path.
+
+Decode is HBM-bound: every generated token streams the whole KV cache once,
+so the kernel's job is (a) never materialize anything bigger than a KV tile
+in VMEM, (b) read the cache at its storage precision (int8 halves the
+dominant roofline term), and (c) never expand GQA kv-heads in HBM.
+
+Layout / grid
+-------------
+q: (B, H, hd) single-token queries, reshaped to (B, K, G, hd) so each grid
+program owns one (batch, kv-head) pair and its G query heads. The KV cache
+keeps the model's native (B, Smax, K, hd) layout; the kv-head is selected in
+the BlockSpec index maps (``b % K``) — GQA needs no `jnp.repeat`, no head
+materialization, no transpose of the cache. Grid = (B*K, Smax/bkv) with the
+KV-chunk axis innermost and sequential: online-softmax partial (max, sum,
+acc) statistics live in VMEM scratch and are combined across chunks exactly
+like flash-decoding's split-KV reduction.
+
+Masking comes from the live ``pos`` scalar: chunks entirely beyond ``pos``
+skip their compute via ``pl.when`` (their DMA still happens — the price of
+static shapes), and the tail chunk is masked per-position.
+
+int8-KV variant
+---------------
+When per-(layer,head) scales are provided, k/v refs are int8 and are
+dequantized in-kernel (one scalar multiply per tile, fused on the VPU).
+The cushion/sink prefix block [0:m) is NOT quantized: following
+KVSink/IntactKV, sink-token KV must stay intact or the whole softmax
+distribution degrades. It is read from a separate full-precision ref
+(``kc``/``vc``, batch-free — the cushion is shared across the batch) and
+folded into the online softmax as the first block; the int8 cache holds
+content positions only, and positions below the cushion length are masked
+out of the int8 read.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(*refs, bkv: int, n_kv: int, cushion_m: int, mp: int,
+            quantized: bool, scale: float):
+    pos_ref, q_ref, k_ref, v_ref = refs[:4]
+    i = 4
+    if quantized:
+        ks_ref, vs_ref = refs[i], refs[i + 1]
+        i += 2
+    if cushion_m:
+        kc_ref, vc_ref = refs[i], refs[i + 1]
+        i += 2
+    o_ref = refs[i]
+    m_ref, l_ref, acc_ref = refs[i + 1:i + 4]
+
+    j = pl.program_id(1)
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (Gp, hd)
+    Gp = q.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if cushion_m:
+        # Fold the protected fp cushion block [0:m) once, as the first
+        # online-softmax block (every decode query sees the full sink block).
+        @pl.when(j == 0)
+        def _cushion():
+            kc = kc_ref[:, 0].astype(jnp.float32)        # (mp, hd)
+            vc = vc_ref[:, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            jc = jax.lax.broadcasted_iota(jnp.int32, (Gp, mp), 1)
+            valid = jc < cushion_m
+            s = jnp.where(valid, s, NEG_INF)
+            m0 = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.where(valid, jnp.exp(s - m0), 0.0)
+            l_ref[...] = jnp.sum(p, axis=-1, keepdims=True)
+            acc_ref[...] = jax.lax.dot_general(
+                p, vc, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m0
+
+    @pl.when(j * bkv <= pos)       # chunks fully beyond pos: skip compute
+    def _chunk():
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bkv, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0]
+            v = v * vs_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (Gp, bkv), 1)
+        valid = kj <= pos
+        if cushion_m:
+            valid &= kj >= cushion_m      # [0:m) lives in the fp cushion ref
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
+                 k_scale: jax.Array | None = None,
+                 v_scale: jax.Array | None = None,
+                 kc: jax.Array | None = None,
+                 vc: jax.Array | None = None,
+                 bkv: int = 512, interpret: bool = False) -> jax.Array:
+    """Single-token decode attention over a (possibly int8) KV cache.
+
+    q: (B, H, hd) — the one new query per sequence.
+    k/v: (B, Smax, K, hd) cache in storage layout; fp, or int8 when
+        k_scale/v_scale ((K,) fp32 per-head dequant scales) are given.
+    pos: () int32 — absolute position of the just-written token; only cache
+        positions <= pos are attended.
+    kc/vc: (m, K, hd) fp cushion prefix block covering absolute positions
+        [0:m) (int8 caches only; requires pos >= m). Batch-free — the
+        CushionCache is shared across sequences.
+
+    Returns (B, H, hd). VMEM working set per program:
+        G*hd (q) + 2*bkv*hd (kv tile) + G*bkv (p) + G*hd fp32 (acc).
+    """
+    B, H, hd = q.shape
+    Smax, K = k.shape[1], k.shape[2]
+    G = H // K
+    quantized = k_scale is not None
+    m = 0 if kc is None else kc.shape[0]
+    assert quantized or m == 0, "fp caches hold the cushion in-cache"
+
+    Gp = -(-G // 8) * 8                # sublane-align the query-head block
+    q4 = q.reshape(B, K, G, hd)
+    if Gp != G:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    bkv = min(bkv, Smax)
+    while Smax % bkv and bkv > 8:
+        # prefer a chunk size that divides Smax: a ragged tail would force a
+        # jnp.pad — a full HBM copy of the cache EVERY decode step (callers
+        # size caches to multiples of 128, so this normally stops at a
+        # power-of-two >= 128)
+        bkv //= 2
+    Tp = -(-Smax // bkv) * bkv
+    if Tp != Smax:
+        pad = ((0, 0), (0, Tp - Smax), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_kv = Tp // bkv
+    mp = m
+    if m:
+        mp = -(-m // 8) * 8
+        if mp != m:
+            padc = ((0, mp - m), (0, 0), (0, 0))
+            kc = jnp.pad(kc, padc)
+            vc = jnp.pad(vc, padc)
+    posa = jnp.asarray(pos, jnp.int32).reshape(1)
+    scale = 1.0 / np.sqrt(hd)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, j: (0,)),                            # pos
+        pl.BlockSpec((1, 1, Gp, hd), lambda b, j: (b // K, b % K, 0, 0)), # q
+        pl.BlockSpec((1, bkv, 1, hd), lambda b, j: (b // K, j, b % K, 0)),
+        pl.BlockSpec((1, bkv, 1, hd), lambda b, j: (b // K, j, b % K, 0)),
+    ]
+    args = [posa, q4, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1,), lambda b, j: (b % K,)),
+                     pl.BlockSpec((1,), lambda b, j: (b % K,))]
+        args += [jnp.asarray(k_scale, jnp.float32),
+                 jnp.asarray(v_scale, jnp.float32)]
+    if m:
+        in_specs += [pl.BlockSpec((mp, 1, hd), lambda b, j: (0, b % K, 0)),
+                     pl.BlockSpec((mp, 1, hd), lambda b, j: (0, b % K, 0))]
+        args += [kc, vc]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bkv=bkv, n_kv=n_kv, cushion_m=m, mp=mp,
+                          quantized=quantized, scale=scale),
+        grid=(B * K, n_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, Gp, hd),
+                               lambda b, j: (b // K, b % K, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, Gp, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((Gp, 1), jnp.float32),
+                        pltpu.VMEM((Gp, 1), jnp.float32),
+                        pltpu.VMEM((Gp, hd), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out[:, :, :G].reshape(B, H, hd)

@@ -18,6 +18,7 @@ from repro.configs.base import QuantConfig
 from repro.core import quantization as Q
 from repro.kernels.act_quant import act_quant_ptoken, act_quant_static
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.w8a8_matmul import w8a8_matmul
 
 
@@ -63,15 +64,28 @@ def qdot_pallas(x: jax.Array, w: jax.Array, cfg: QuantConfig,
 def attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                      causal: bool = True, prefix_len: int = 0,
                      interpret: bool = True) -> jax.Array:
-    """q: (B,S,H,hd); k/v: (B,T,Kh,hd) GQA -> expand kv heads, run the
-    flash kernel, return (B,S,H,hd)."""
+    """q: (B,S,H,hd); k/v: (B,T,Kh,hd). GQA kv-heads are indexed natively
+    inside the flash kernel's BlockSpec index maps — no G× head expansion is
+    ever materialized in HBM. Returns (B,S,H,hd)."""
     B, S, H, hd = q.shape
-    T, Kh = k.shape[1], k.shape[2]
-    G = H // Kh
+    T = k.shape[1]
     qh = jnp.transpose(q, (0, 2, 1, 3))
-    kh = jnp.repeat(jnp.transpose(k, (0, 2, 1, 3)), G, axis=1)
-    vh = jnp.repeat(jnp.transpose(v, (0, 2, 1, 3)), G, axis=1)
+    kh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
     o = flash_attention(qh, kh, vh, causal=causal, prefix_len=prefix_len,
                         bq=min(256, S), bkv=min(512, T),
                         interpret=interpret)
     return jnp.transpose(o, (0, 2, 1, 3))
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, pos,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None,
+                            kc: jax.Array | None = None,
+                            vc: jax.Array | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """Model-level entry for the split-KV decode kernel. q: (B,H,hd);
+    k/v: the (B,Smax,K,hd) cache (int8 when scales given, cushion block in
+    kc/vc). Returns (B,H,hd)."""
+    return flash_decode(q, k, v, pos, k_scale=k_scale, v_scale=v_scale,
+                        kc=kc, vc=vc, interpret=interpret)

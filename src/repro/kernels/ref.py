@@ -46,10 +46,13 @@ def act_quant_static_ref(x: jax.Array, scale: jax.Array, zero: jax.Array,
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True, prefix_len: int = 0
                         ) -> jax.Array:
-    """q: (B,H,S,hd); k/v: (B,H,T,hd); T = prefix_len + S when causal.
-    Prefix positions fully visible (the CushionCache block)."""
+    """q: (B,H,S,hd); k/v: (B,Kh,T,hd) with Kh | H (GQA); T = prefix_len + S
+    when causal. Prefix positions fully visible (the CushionCache block)."""
     B, H, S, hd = q.shape
-    T = k.shape[2]
+    Kh, T = k.shape[1], k.shape[2]
+    if Kh != H:
+        k = jnp.repeat(k, H // Kh, axis=1)
+        v = jnp.repeat(v, H // Kh, axis=1)
     logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
                         k.astype(jnp.float32)) / np.sqrt(hd)
     if causal:
@@ -60,3 +63,39 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     w = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None,
+                     kc: jax.Array | None = None,
+                     vc: jax.Array | None = None) -> jax.Array:
+    """Oracle for the split-KV decode kernel (also the CPU/jnp decode path
+    for quantized caches).
+
+    q: (B,H,hd); k/v: (B,Smax,K,hd) — fp, or int8 with per-head dequant
+    scales k_scale/v_scale (K,). kc/vc: (m,K,hd) fp cushion block covering
+    absolute positions [0:m) (int8 caches keep the sink block intact).
+    Attends to positions [0:pos]. Returns (B,H,hd) in q.dtype.
+    """
+    B, H, hd = q.shape
+    Smax, K = k.shape[1], k.shape[2]
+    G = H // K
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[None, None, :, None]
+        vf = vf * v_scale.astype(jnp.float32)[None, None, :, None]
+    if kc is not None and kc.shape[0]:
+        m = kc.shape[0]
+        kcb = jnp.broadcast_to(kc.astype(jnp.float32)[None], (B,) + kc.shape)
+        vcb = jnp.broadcast_to(vc.astype(jnp.float32)[None], (B,) + vc.shape)
+        kf = jnp.concatenate([kcb, kf[:, m:]], axis=1)
+        vf = jnp.concatenate([vcb, vf[:, m:]], axis=1)
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, kf) / np.sqrt(hd)
+    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -3,6 +3,11 @@ optional CushionCache artifact.
 
     python -m repro.launch.serve --arch paper_tiny --quant pt_static \
         --cushion artifacts/cushion.npz --tokens 64
+
+The decode loop is device-resident (one jitted lax.scan — no per-token host
+sync); --kv-dtype int8 serves from a quantized KV cache with the cushion
+prefix kept intact in fp. --bench-json PATH appends a TTFT/TPOT trajectory
+point for perf regression tracking.
 """
 from __future__ import annotations
 
@@ -32,6 +37,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from latest checkpoint")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
+                    help="KV-cache storage precision (int8 halves decode "
+                         "HBM traffic; cushion prefix stays fp)")
+    ap.add_argument("--bench-json", default=None,
+                    help="append a {ttft,tpot} trajectory point to this file")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -57,12 +67,34 @@ def main(argv=None):
 
     qcfg = QuantConfig(mode=args.quant)
     eng = Engine(api, params, qcfg,
-                 max_seq=args.prompt_len + args.tokens + 32)
+                 max_seq=args.prompt_len + args.tokens + 32,
+                 kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype)
+    if args.bench_json:
+        eng.generate(batch, args.tokens)     # warm/compile: the recorded
+        # point must measure steady-state decode, not scan-loop tracing
     res = eng.generate(batch, args.tokens)
     print(f"[serve] B={args.batch} prompt={args.prompt_len} "
-          f"gen={args.tokens} TTFT={res.ttft_ms:.1f}ms "
-          f"TPOT={res.tpot_ms:.2f}ms")
+          f"gen={args.tokens} kv={args.kv_dtype} "
+          f"TTFT={res.ttft_ms:.1f}ms TPOT={res.tpot_ms:.2f}ms")
     print("[serve] sample:", res.tokens[0][:16].tolist())
+    if args.bench_json:
+        point = {"arch": args.arch, "quant": args.quant,
+                 "kv_dtype": args.kv_dtype, "batch": args.batch,
+                 "prompt_len": args.prompt_len, "tokens": args.tokens,
+                 "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms}
+        hist = []
+        if os.path.exists(args.bench_json):
+            try:
+                with open(args.bench_json) as f:
+                    prev = json.load(f)
+                hist = prev if isinstance(prev, list) else [prev]
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"[serve] WARNING: could not read {args.bench_json} "
+                      f"({e}); starting a fresh trajectory")
+        hist.append(point)
+        with open(args.bench_json, "w") as f:
+            json.dump(hist, f, indent=1)
+        print(f"[serve] bench point -> {args.bench_json}")
     return res
 
 

@@ -316,15 +316,51 @@ def attention_full(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
     return y
 
 
-def attention_decode(p: Params, x: Array, cache_k: Array, cache_v: Array,
-                     pos: Array, cfg: ModelConfig, qcfg: QuantConfig,
-                     scales: Optional[Params], taps: Optional[Dict]):
-    """Single-token decode. x: (B,1,D); cache_k/v: (B,Smax,K,hd); pos: ()
-    absolute write position (cushion prefix occupies cache[:m]).
+def _use_decode_kernel() -> bool:
+    """Route decode attention through the Pallas split-KV kernel? "auto"
+    enables it on TPU backends only (the jnp path is the CPU oracle)."""
+    from repro.flags import DECODE_KERNEL
+    if DECODE_KERNEL == "pallas":
+        return True
+    if DECODE_KERNEL == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
 
-    KV-cache sequence axis is shardable on `model` (flash-decoding style
-    split-KV): the logits/softmax over the sharded axis lower to a
-    reduce-scatter/all-reduce pair under GSPMD.
+
+def quantize_kv(x: Array, scale: Array) -> Array:
+    """Symmetric per-head int8 KV quantization (the core quantizer with a
+    per-head scale). x: (..., K, hd); scale: (K,) fp32."""
+    q = Q.quantize(x.astype(jnp.float32), scale[..., :, None],
+                   jnp.zeros(()), bits=8, symmetric=True)
+    return q.astype(jnp.int8)
+
+
+def kv_scales_from(k: Array, head_axis: int = -2) -> Array:
+    """Per-kv-head static dequant scale from observed KV (symmetric amax
+    rule from the quantization core, with a floor). Reduces over every axis
+    except `head_axis`."""
+    axes = tuple(a for a in range(k.ndim) if a != head_axis % k.ndim)
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=axes)
+    scale, _ = Q.params_from_minmax(-amax, amax, bits=8, symmetric=True)
+    return jnp.maximum(scale, 1e-6)
+
+
+def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
+                        cfg: ModelConfig, qcfg: QuantConfig,
+                        scales: Optional[Params], taps: Optional[Dict]
+                        ) -> Tuple[Array, Params]:
+    """Single-token decode over one layer's KV-cache dict (the serving fast
+    path). x: (B,1,D); pos: () absolute write position.
+
+    kv is either the fp cache {"k","v": (B,Smax,K,hd)} (cushion rows live
+    in-cache at [0:m)) or the int8 cache
+        {"k","v": int8 (B,Smax,K,hd), "k_scale","v_scale": (K,) fp32,
+         "kc","vc": (m,K,hd) fp}
+    where the cushion/sink block is kept intact in fp (KVSink/IntactKV rule)
+    and the int8 tensors hold content positions [m:Smax) only. The new
+    token's KV is quantized with the static per-(layer,head) scales derived
+    at prefill. Attention runs on the Pallas split-KV flash-decode kernel on
+    TPU, or the jnp oracle elsewhere. Returns (y, updated kv dict).
     """
     B = x.shape[0]
     qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps)
@@ -333,17 +369,52 @@ def attention_decode(p: Params, x: Array, cache_k: Array, cache_v: Array,
     cos, sin = rope_cos_sin(posv, cfg.head_dim, cfg.rope_theta)
     q = apply_rope(q, cos[None], sin[None])
     k = apply_rope(k, cos[None], sin[None])
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
-    Smax = cache_k.shape[1]
-    mask = (jnp.arange(Smax) <= pos)[None, :]
-    mask = jnp.broadcast_to(mask, (1, Smax))
-    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+
+    quantized = "k_scale" in kv
+    if quantized:
+        ks, vs = kv["k_scale"], kv["v_scale"]
+        k_wr = quantize_kv(k, ks)
+        v_wr = quantize_kv(v, vs)
+    else:
+        k_wr = k.astype(kv["k"].dtype)
+        v_wr = v.astype(kv["v"].dtype)
+    cache_k = jax.lax.dynamic_update_slice(kv["k"], k_wr, (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(kv["v"], v_wr, (0, pos, 0, 0))
+    new = dict(kv)
+    new["k"], new["v"] = cache_k, cache_v
+
+    q1 = q[:, 0]                        # (B, H, hd)
+    if _use_decode_kernel():
+        from repro.kernels.ops import decode_attention_pallas
+        out = decode_attention_pallas(
+            q1, cache_k, cache_v, pos,
+            k_scale=ks if quantized else None,
+            v_scale=vs if quantized else None,
+            kc=kv.get("kc"), vc=kv.get("vc"),
+            interpret=jax.default_backend() != "tpu")
+    elif quantized:
+        from repro.kernels.ref import flash_decode_ref
+        out = flash_decode_ref(q1, cache_k, cache_v, pos, k_scale=ks,
+                               v_scale=vs, kc=kv.get("kc"), vc=kv.get("vc"))
+    else:
+        Smax = cache_k.shape[1]
+        mask = jnp.broadcast_to((jnp.arange(Smax) <= pos)[None, :],
+                                (1, Smax))
+        out = _sdpa(q, cache_k, cache_v, mask, cfg)[:, 0]
     out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
     y = qlinear(out, p["wo"], None, qcfg, scales, "o", taps)
-    return y, cache_k, cache_v
+    return y, new
+
+
+def attention_decode(p: Params, x: Array, cache_k: Array, cache_v: Array,
+                     pos: Array, cfg: ModelConfig, qcfg: QuantConfig,
+                     scales: Optional[Params], taps: Optional[Dict]):
+    """Single-token decode over bare fp cache arrays (legacy signature;
+    encdec's self-attention still uses it). Delegates to
+    attention_decode_kv."""
+    y, new = attention_decode_kv(p, x, {"k": cache_k, "v": cache_v}, pos,
+                                 cfg, qcfg, scales, taps)
+    return y, new["k"], new["v"]
 
 
 # ---------------------------------------------------------------------------

@@ -224,25 +224,45 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
 # Serving
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Params:
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+               kv_dtype=None, prefix_len: int = 0) -> Params:
+    """kv_dtype "int8": attention KV stored int8 with per-(period,head)
+    scales and a protected fp cushion block (see transformer.init_cache);
+    Mamba states always stay fp."""
     dt = dtype or C.dtype_of(cfg)
     n_periods, _ = layout(cfg)
     nm = n_mamba_per_period(cfg)
     K, hd = cfg.n_kv_heads, cfg.head_dim
     inner, d_state, d_conv, _ = SSM.dims(cfg)
-    return {
+    cache = {
         "k": jnp.zeros((n_periods, batch, max_seq, K, hd), dt),
         "v": jnp.zeros((n_periods, batch, max_seq, K, hd), dt),
         "h": jnp.zeros((n_periods, nm, batch, inner, d_state), jnp.float32),
         "conv": jnp.zeros((n_periods, nm, batch, d_conv - 1, inner), dt),
     }
+    if kv_dtype is not None:
+        if kv_dtype not in ("int8", jnp.int8):
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        cache["k"] = cache["k"].astype(jnp.int8)
+        cache["v"] = cache["v"].astype(jnp.int8)
+        cache.update({
+            "k_scale": jnp.ones((n_periods, K), jnp.float32),
+            "v_scale": jnp.ones((n_periods, K), jnp.float32),
+            "kc": jnp.zeros((n_periods, prefix_len, K, hd), dt),
+            "vc": jnp.zeros((n_periods, prefix_len, K, hd), dt)})
+    return cache
 
 
-def cache_roles(cfg: ModelConfig) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
     kv = (None, "B", "M", None, None)
-    return {"k": kv, "v": kv,
-            "h": (None, None, "B", "M", None),
-            "conv": (None, None, "B", None, "M")}
+    roles = {"k": kv, "v": kv,
+             "h": (None, None, "B", "M", None),
+             "conv": (None, None, "B", None, "M")}
+    if kv_dtype is not None:
+        roles.update({"k_scale": (None, None), "v_scale": (None, None),
+                      "kc": (None, None, None, None),
+                      "vc": (None, None, None, None)})
+    return roles
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
@@ -317,18 +337,22 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
 
     # write cushion kv then prompt kv into cache
     if cushion is not None:
-        ck = jnp.broadcast_to(cushion["kv"]["k"][:, None],
-                              (n_periods, B, m, K, hd)).astype(cache["k"].dtype)
-        cv = jnp.broadcast_to(cushion["kv"]["v"][:, None],
-                              (n_periods, B, m, K, hd)).astype(cache["v"].dtype)
-        cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ck, (0, 0, 0, 0, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], cv, (0, 0, 0, 0, 0))
-    cache = dict(cache)
-    cache["k"] = jax.lax.dynamic_update_slice(
-        cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0))
-    cache["v"] = jax.lax.dynamic_update_slice(
-        cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0))
+        if "kc" in cache:
+            # quantized cache: cushion block protected in fp (kc/vc)
+            assert cache["kc"].shape[1] == m, \
+                f"cache prefix_len {cache['kc'].shape[1]} != cushion len {m}"
+            cache = dict(cache)
+            cache["kc"] = cushion["kv"]["k"].astype(cache["kc"].dtype)
+            cache["vc"] = cushion["kv"]["v"].astype(cache["vc"].dtype)
+        else:
+            ck = jnp.broadcast_to(cushion["kv"]["k"][:, None],
+                                  (n_periods, B, m, K, hd)).astype(cache["k"].dtype)
+            cv = jnp.broadcast_to(cushion["kv"]["v"][:, None],
+                                  (n_periods, B, m, K, hd)).astype(cache["v"].dtype)
+            cache = dict(cache)
+            cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ck, (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(cache["v"], cv, (0, 0, 0, 0, 0))
+    cache = T.write_prompt_kv(cache, ks, vs, m)
     cache["h"] = mstates["h"]
     cache["conv"] = mstates["conv"].astype(cache["conv"].dtype)
     x = C.apply_norm(params["ln_f"], x, cfg)
@@ -345,14 +369,17 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
     lscales = ({s: scales[s] for s in SITES} if scales is not None
                else C.placeholder_scales(SITES, n_periods))
 
+    kv_keys = [k for k in ("k", "v", "k_scale", "v_scale", "kc", "vc")
+               if k in cache]
+
     def body(h, xs):
-        pp, lsc, ck, cv, mh, mconv = xs
+        pp, lsc, kvd, mh, mconv = xs
         mi = 0
         for j, (mixer, mlp) in enumerate(kinds):
             sub = pp["sub"][j]
             hn = C.apply_norm(sub["ln1"], h, cfg)
             if mixer == "attn":
-                o, ck, cv = C.attention_decode(sub["attn"], hn, ck, cv, pos,
+                o, kvd = C.attention_decode_kv(sub["attn"], hn, kvd, pos,
                                                cfg, qcfg, lsc, None)
             else:
                 st = {"h": mh[mi], "conv": mconv[mi]}
@@ -368,12 +395,14 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
             else:
                 y = C.apply_mlp(sub["mlp"], hn, cfg, qcfg, lsc, None)
             h = h + y
-        return h, (ck, cv, mh, mconv)
+        return h, (kvd, mh, mconv)
 
-    x, (ks, vs, mh, mconv) = jax.lax.scan(
-        body, x, (params["layers"], lscales, cache["k"], cache["v"],
+    x, (kvs, mh, mconv) = jax.lax.scan(
+        body, x, (params["layers"], lscales,
+                  {k: cache[k] for k in kv_keys},
                   cache["h"], cache["conv"]))
-    cache = {"k": ks, "v": vs, "h": mh, "conv": mconv}
+    cache = dict(kvs)
+    cache["h"], cache["conv"] = mh, mconv
     x = C.apply_norm(params["ln_f"], x, cfg)
     logits = C.lm_head(params, x, cfg, qcfg, scales, None)
     return logits[:, 0], cache

@@ -216,10 +216,7 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     if remat:
         body = jax.checkpoint(body)
     x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], lscales, pre))
-    cache = {"k": jax.lax.dynamic_update_slice(
-                 cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0)),
-             "v": jax.lax.dynamic_update_slice(
-                 cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0))}
+    cache = T.write_prompt_kv(cache, ks, vs, m)
     x = C.apply_norm(params["ln_f"], x, cfg)
     logits = C.lm_head(params, x[:, -1:], cfg, qcfg, scales, None)
     return logits, cache, jnp.asarray(m + S, jnp.int32)
@@ -233,19 +230,17 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                else C.placeholder_scales(SITES, cfg.n_layers))
 
     def body(h, xs):
-        lp, lsc, ck, cv = xs
+        lp, lsc, kvc = xs
         hn = C.apply_norm(lp["ln1"], h, cfg)
-        a, ck, cv = C.attention_decode(lp["attn"], hn, ck, cv, pos, cfg, qcfg,
+        a, kvc = C.attention_decode_kv(lp["attn"], hn, kvc, pos, cfg, qcfg,
                                        lsc, None)
         h = h + a
         hn = C.apply_norm(lp["ln2"], h, cfg)
         y, _ = apply_moe(lp["moe"], hn, cfg, qcfg, lsc, None)
         h = h + y
-        return h, (ck, cv)
+        return h, kvc
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], lscales,
-                                         cache["k"], cache["v"]))
-    cache = {"k": ks, "v": vs}
+    x, cache = jax.lax.scan(body, x, (params["layers"], lscales, cache))
     x = C.apply_norm(params["ln_f"], x, cfg)
     logits = C.lm_head(params, x, cfg, qcfg, scales, None)
     return logits[:, 0], cache

@@ -65,8 +65,18 @@ class ModelAPI:
         return self.mod.forward(params, batch["tokens"], self.cfg, qcfg,
                                 **_extra_kwargs(self.cfg, batch), **kw)
 
-    def init_cache(self, batch: int, max_seq: int, dtype=None):
-        return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype)
+    def init_cache(self, batch: int, max_seq: int, dtype=None,
+                   kv_dtype=None, prefix_len: int = 0):
+        """kv_dtype "int8" requests quantized KV storage (attention-cache
+        families only); prefix_len sizes the protected fp cushion block."""
+        if kv_dtype is None:
+            return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype)
+        if self.cfg.family not in (Family.DENSE, Family.MOE, Family.VLM,
+                                   Family.HYBRID):
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} unsupported for {self.cfg.family}")
+        return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype,
+                                   kv_dtype=kv_dtype, prefix_len=prefix_len)
 
     def prefill(self, params, batch, cache, qcfg: QuantConfig, **kw):
         return self.mod.prefill(params, batch["tokens"], cache, self.cfg,

@@ -119,19 +119,38 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None) -> Params:
+               dtype=None, kv_dtype=None, prefix_len: int = 0) -> Params:
+    """kv_dtype None -> fp cache {"k","v"}. kv_dtype "int8" -> quantized
+    cache: int8 k/v storage (halves decode HBM traffic) + per-(layer,head)
+    dequant scales + a full-precision cushion block kc/vc of `prefix_len`
+    rows — the sink/pivot-token KV stays intact (KVSink/IntactKV) while the
+    int8 tensors hold content positions [prefix_len:max_seq)."""
     dt = dtype or C.dtype_of(cfg)
     K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
-    return {"k": jnp.zeros((L, batch, max_seq, K, hd), dt),
-            "v": jnp.zeros((L, batch, max_seq, K, hd), dt)}
+    if kv_dtype is None:
+        return {"k": jnp.zeros((L, batch, max_seq, K, hd), dt),
+                "v": jnp.zeros((L, batch, max_seq, K, hd), dt)}
+    if kv_dtype not in ("int8", jnp.int8):
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+    return {"k": jnp.zeros((L, batch, max_seq, K, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, max_seq, K, hd), jnp.int8),
+            "k_scale": jnp.ones((L, K), jnp.float32),
+            "v_scale": jnp.ones((L, K), jnp.float32),
+            "kc": jnp.zeros((L, prefix_len, K, hd), dt),
+            "vc": jnp.zeros((L, prefix_len, K, hd), dt)}
 
 
-def cache_roles(cfg: ModelConfig) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
     """KV-cache sharding roles: (L, B, S, K, hd) — batch on B-axes; the
     sequence axis on `model` (flash-decoding split-KV) since kv-head counts
-    are often < TP width."""
+    are often < TP width. Scales/cushion are tiny -> replicated."""
     kv = (None, "B", "M", None, None)
-    return {"k": kv, "v": kv}
+    roles = {"k": kv, "v": kv}
+    if kv_dtype is not None:
+        roles.update({"k_scale": (None, None), "v_scale": (None, None),
+                      "kc": (None, None, None, None),
+                      "vc": (None, None, None, None)})
+    return roles
 
 
 def write_cushion_to_cache(cache: Params, cushion: Optional[Params]) -> Tuple[Params, int]:
@@ -139,6 +158,15 @@ def write_cushion_to_cache(cache: Params, cushion: Optional[Params]) -> Tuple[Pa
         return cache, 0
     kv = cushion["kv"]
     m = kv["k"].shape[1]
+    if "kc" in cache:
+        # quantized cache: the cushion block is protected — stored fp,
+        # never quantized (init_cache must have been given prefix_len == m)
+        assert cache["kc"].shape[1] == m, \
+            f"cache prefix_len {cache['kc'].shape[1]} != cushion len {m}"
+        cache = dict(cache)
+        cache["kc"] = kv["k"].astype(cache["kc"].dtype)
+        cache["vc"] = kv["v"].astype(cache["vc"].dtype)
+        return cache, m
     k = jnp.broadcast_to(kv["k"][:, None], (kv["k"].shape[0], cache["k"].shape[1]) + kv["k"].shape[1:])
     v = jnp.broadcast_to(kv["v"][:, None], (kv["v"].shape[0], cache["v"].shape[1]) + kv["v"].shape[1:])
     cache = {
@@ -148,6 +176,31 @@ def write_cushion_to_cache(cache: Params, cushion: Optional[Params]) -> Tuple[Pa
             cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0)),
     }
     return cache, m
+
+
+def write_prompt_kv(cache: Params, ks: Array, vs: Array, m: int) -> Params:
+    """Write prefill KV (stacked (L,B,S,K,hd) fp) into the cache at absolute
+    positions [m:m+S]. For int8 caches this also derives the static
+    per-(layer,head) dequant scales from the prompt KV — decode steps reuse
+    them (new tokens are clipped into the calibrated range)."""
+    if "k_scale" in cache:
+        k_scale = jax.vmap(C.kv_scales_from)(ks)        # (L, K)
+        v_scale = jax.vmap(C.kv_scales_from)(vs)
+        kq = jax.vmap(C.quantize_kv)(ks, k_scale)
+        vq = jax.vmap(C.quantize_kv)(vs, v_scale)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, 0, m, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, 0, m, 0, 0))
+        cache["k_scale"], cache["v_scale"] = k_scale, v_scale
+        return cache
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0))
+    return cache
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
@@ -185,13 +238,9 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     if remat:
         body = jax.checkpoint(body)
     x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], lscales, pre))
-    # ks: (L, B, S, K, hd) -> write into cache at [m : m+S]
-    cache = {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], ks.astype(cache["k"].dtype), (0, 0, m, 0, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], vs.astype(cache["v"].dtype), (0, 0, m, 0, 0)),
-    }
+    # ks: (L, B, S, K, hd) -> write into cache at [m : m+S] (int8 caches
+    # also calibrate their per-(layer,head) scales here)
+    cache = write_prompt_kv(cache, ks, vs, m)
     x = C.apply_norm(params["ln_f"], x, cfg)
     logits = C.lm_head(params, x[:, -1:], cfg, qcfg,
                        scales if scales is not None else None, None)
@@ -208,19 +257,17 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                else C.placeholder_scales(SITES, cfg.n_layers))
 
     def body(h, xs):
-        lp, lsc, ck, cv = xs
+        lp, lsc, kvc = xs
         hn = C.apply_norm(lp["ln1"], h, cfg)
-        a, ck, cv = C.attention_decode(lp["attn"], hn, ck, cv, pos, cfg, qcfg,
+        a, kvc = C.attention_decode_kv(lp["attn"], hn, kvc, pos, cfg, qcfg,
                                        lsc, None)
         h = h + a
         hn = C.apply_norm(lp["ln2"], h, cfg)
         h = h + C.apply_mlp(lp["mlp"], hn, cfg, qcfg, lsc, None)
-        return h, (ck, cv)
+        return h, kvc
 
-    x, (ks, vs) = jax.lax.scan(body, x,
-                               (params["layers"], lscales,
-                                cache["k"], cache["v"]))
-    cache = {"k": ks, "v": vs}
+    # the cache dict scans layer-wise: every leaf is stacked over L
+    x, cache = jax.lax.scan(body, x, (params["layers"], lscales, cache))
     x = C.apply_norm(params["ln_f"], x, cfg)
     logits = C.lm_head(params, x, cfg, qcfg,
                        scales if scales is not None else None, None)
