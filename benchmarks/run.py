@@ -94,8 +94,84 @@ def decode_bench():
         json.dump({"bench": "decode", "points": points}, f, indent=1)
 
 
+def search_bench():
+    """Greedy-search fast-path bench: wall time + compile count of the
+    compile-once KV-reuse search (`greedy_search`) vs the reference
+    full-forward search (`greedy_search_ref`) on paper_tiny with planted
+    outliers. Emits CSV rows and the ``results/BENCH_search.json``
+    trajectory artifact future PRs regress against.
+
+    Uses per-token dynamic activation quantization, where the two scorers
+    are mathematically identical — the emitted ``prefix_match`` asserts the
+    searched prefixes agree token for token."""
+    import json
+    import os
+
+    import jax
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.configs import CushionConfig, QuantConfig, get_config
+    from repro.core import cushioncache as CC
+    from repro.models.registry import build
+    from repro.monitoring import count_compiles
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    # plant the paper's massive-activation pathology so candidate ranking
+    # is meaningful (same surgery as tests/test_cushion.py)
+    w = params["layers"]["mlp"]["w_down"]
+    params["layers"]["mlp"]["w_down"] = w.at[0, :8, 5].set(300.0)
+
+    qcfg = QuantConfig(mode="ptoken_dynamic")
+    ccfg = CushionConfig(max_prefix_len=16, tau=1.5, n_candidates=64,
+                         sample_len=48, seed_tokens=(1,))
+
+    def sample(i):
+        return api.make_batch(jax.random.PRNGKey(1000 + i), 1,
+                              ccfg.sample_len)
+
+    runs = {}
+    for name, fn in (("fast", CC.greedy_search),
+                     ("ref", CC.greedy_search_ref)):
+        with count_compiles() as c:
+            t0 = time.perf_counter()
+            res = fn(api, params, sample, qcfg, ccfg, jax.random.PRNGKey(0),
+                     chunk=8, verbose=False)
+            wall = time.perf_counter() - t0
+        runs[name] = {"wall_s": wall, "compiles": c.count,
+                      "prefix": [int(t) for t in res.prefix_ids],
+                      "iters": len(res.history)}
+        emit(f"search_{name}_wall", wall * 1e6,
+             f"{c.count} compiles, {len(res.history)} iters")
+
+    speedup = runs["ref"]["wall_s"] / max(runs["fast"]["wall_s"], 1e-9)
+    match = runs["fast"]["prefix"] == runs["ref"]["prefix"]
+    emit("search_speedup", speedup * 1e6, f"prefix_match={match}")
+    point = {"model": cfg.name, "quant_mode": qcfg.mode,
+             "max_prefix_len": ccfg.max_prefix_len,
+             "n_candidates": ccfg.n_candidates,
+             "sample_len": ccfg.sample_len,
+             "wall_s_fast": runs["fast"]["wall_s"],
+             "wall_s_ref": runs["ref"]["wall_s"],
+             "compiles_fast": runs["fast"]["compiles"],
+             "compiles_ref": runs["ref"]["compiles"],
+             "speedup": speedup, "prefix_match": match,
+             "prefix_fast": runs["fast"]["prefix"],
+             "prefix_ref": runs["ref"]["prefix"]}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_search.json"), "w") as f:
+        json.dump({"bench": "search", "points": [point]}, f, indent=1)
+    if not match:
+        raise SystemExit(
+            f"search fast path diverged from reference: "
+            f"{runs['fast']['prefix']} vs {runs['ref']['prefix']}")
+
+
 EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
-                 "decode_bench": decode_bench}
+                 "decode_bench": decode_bench,
+                 "search_bench": search_bench}
 
 
 def main() -> None:
@@ -115,6 +191,7 @@ def main() -> None:
         return
     if not args.only:
         decode_bench()
+        search_bench()
     from benchmarks import paper_tables as PT
     fns = PT.ALL
     if args.only:

@@ -14,6 +14,27 @@ Two stages:
 The searched prefix is converted to the deployment artifact with
 `ModelAPI.extract_cushion` (KV for attention archs, recurrent state for
 SSM/hybrid — see DESIGN.md §5).
+
+Search fast path
+----------------
+`greedy_search` is a compile-once, device-resident implementation for
+families with a pure attention-KV prefix artifact (dense/moe/vlm):
+
+* the prefix is padded to ``ccfg.max_prefix_len`` and a live-length scalar
+  is threaded through attention masking, so ONE compiled executable serves
+  every iteration (the reference recompiles per appended token);
+* the shared prefix is prefilled into a KV cache once per iteration
+  (``ModelAPI.prefix_kv``) and every candidate is scored against the cached
+  block (``ModelAPI.score_candidates``) — no O(N·m) prefix recompute;
+* candidates are scored by ``lax.map`` over fixed-size chunks with an
+  on-device argmin, so each iteration costs one host sync instead of
+  ``n_candidates / chunk``.
+
+`greedy_search_ref` keeps the original full-forward implementation: it is
+the parity oracle for the fast path, the scorer for families whose prefix
+artifact is not pure attention KV (ssm/hybrid/encdec — `greedy_search`
+falls back to it automatically), and the baseline for
+``benchmarks/run.py search_bench``.
 """
 from __future__ import annotations
 
@@ -77,27 +98,41 @@ class SearchResult:
     wall_time_s: float
 
 
+# always-included nonsemantic candidates (<bos>-like low ids); also the
+# sizing basis for the fast path's fixed candidate-pool shape
+SPECIAL_TOKENS = (0, 1, 2, 3, 10, 13, 32, 198)
+
+
+def _specials(vocab_size: int, seed_tokens: Tuple[int, ...]) -> np.ndarray:
+    s = np.unique(np.array(list(seed_tokens) + list(SPECIAL_TOKENS)))
+    return s[s < vocab_size]
+
+
 def candidate_pool(rng, vocab_size: int, n: int,
                    seed_tokens: Tuple[int, ...] = ()) -> np.ndarray:
     """Random subset of the embedding table + always-included nonsemantic
-    candidates (<bos>-like low ids), standing in for the full-table argmin
-    (eq. 9) at CPU scale."""
-    n_rand = max(0, n - 8)
+    candidates, standing in for the full-table argmin (eq. 9) at CPU
+    scale."""
+    n_rand = max(0, n - len(SPECIAL_TOKENS))
     cands = jax.random.choice(rng, vocab_size, (n_rand,), replace=False)
-    specials = np.unique(np.array(list(seed_tokens) +
-                                  [0, 1, 2, 3, 10, 13, 32, 198]))
-    specials = specials[specials < vocab_size]
+    specials = _specials(vocab_size, seed_tokens)
     return np.unique(np.concatenate([np.asarray(cands), specials]))
 
 
-def greedy_search(api, params, sample_fn: Callable[[int], Dict[str, Any]],
-                  qcfg: QuantConfig, ccfg: CushionConfig, rng,
-                  chunk: int = 16, verbose: bool = True) -> SearchResult:
-    """Algorithm 1. sample_fn(i) -> calibration batch (batch 1, length n).
+def greedy_search_ref(api, params, sample_fn: Callable[[int], Dict[str, Any]],
+                      qcfg: QuantConfig, ccfg: CushionConfig, rng,
+                      chunk: int = 16, verbose: bool = True) -> SearchResult:
+    """Algorithm 1, reference implementation (full forward per candidate).
 
-    Each iteration draws a fresh sample t ~ D, evaluates all candidates
-    p' by batched inference, and appends the argmin if it improves L_q by
-    the factor tau (eq. 10); stops otherwise or at max length.
+    sample_fn(i) -> calibration batch (batch 1, length n). Each iteration
+    draws a fresh sample t ~ D, evaluates all candidates p' by batched
+    inference, and appends the argmin if it improves L_q by the factor tau
+    (eq. 10); stops otherwise or at max length.
+
+    Every iteration recompiles both scorers (the prefix shape grows by one
+    token) and pays a host round-trip per candidate chunk. Kept as the
+    parity oracle / benchmark baseline for `greedy_search`, and as the
+    scorer for families without KV-reuse support (ssm/hybrid/encdec).
     """
     t0 = time.time()
     qerr_fn = make_qerr_fn(api, qcfg)
@@ -136,6 +171,101 @@ def greedy_search(api, params, sample_fn: Callable[[int], Dict[str, Any]],
                   f"ratio={best_err / max(base_err, 1e-30):.3f})")
         if best_err > ccfg.tau * base_err:
             break                      # eq. (10) early stop
+        prefix.append(best_tok)
+        it += 1
+
+    return SearchResult(prefix_ids=np.asarray(prefix, np.int32),
+                        history=history, wall_time_s=time.time() - t0)
+
+
+def _pool_pad_len(vocab_size: int, ccfg: CushionConfig, chunk: int) -> int:
+    """Static upper bound on `candidate_pool`'s (variable) length, rounded
+    up to a chunk multiple — the fixed shape the compile-once search step is
+    built for."""
+    cap = max(0, ccfg.n_candidates - len(SPECIAL_TOKENS)) \
+        + len(_specials(vocab_size, ccfg.seed_tokens))
+    return max(chunk, -(-cap // chunk) * chunk)
+
+
+def make_search_step_fn(api, qcfg: QuantConfig,
+                        scales: Optional[Params] = None) -> Callable:
+    """One fused greedy-search iteration, jitted once for the whole search:
+
+        step(params, padded_prefix (max_m,), live_len (), cands
+             (n_chunks, chunk), batch) -> (base_err, best_err, best_tok)
+
+    Prefills the shared (padded) prefix into a KV cache, computes the base
+    L_q, scores every candidate chunk via `lax.map` over the vmapped
+    KV-reuse scorer, and argmins on device — all shapes are independent of
+    the live prefix length, so the executable compiles exactly once.
+    """
+    def step(params, padded_prefix, live_len, cands, batch):
+        pkv = api.prefix_kv(params, padded_prefix, qcfg, scales=scales)
+        base = api.prefix_qerr(params, pkv, live_len, batch, qcfg,
+                               scales=scales)
+        errs = jax.lax.map(
+            lambda cs: api.score_candidates(params, pkv, live_len, cs,
+                                            batch, qcfg, scales=scales),
+            cands).reshape(-1)
+        j = jnp.argmin(errs)
+        return base, errs[j], cands.reshape(-1)[j]
+
+    return jax.jit(step)
+
+
+def greedy_search(api, params, sample_fn: Callable[[int], Dict[str, Any]],
+                  qcfg: QuantConfig, ccfg: CushionConfig, rng,
+                  chunk: int = 16, verbose: bool = True) -> SearchResult:
+    """Algorithm 1, compile-once fast path (see module docstring).
+
+    Produces the same candidate pools in the same order as
+    `greedy_search_ref` (identical rng schedule), scores them via KV reuse,
+    and delegates to the reference implementation for families without an
+    attention-KV-only prefix artifact.
+    """
+    if not api.supports_kv_scoring:
+        if verbose:
+            print(f"[greedy] {api.cfg.family}: no KV-reuse scoring; "
+                  "falling back to greedy_search_ref")
+        return greedy_search_ref(api, params, sample_fn, qcfg, ccfg, rng,
+                                 chunk=chunk, verbose=verbose)
+
+    t0 = time.time()
+    max_m = ccfg.max_prefix_len
+    step_fn = make_search_step_fn(api, qcfg)
+    n_pool = _pool_pad_len(api.cfg.vocab_size, ccfg, chunk)
+    prefix: List[int] = list(ccfg.seed_tokens)
+    padded = np.zeros((max_m,), np.int32)
+    padded[:len(prefix)] = prefix
+    history: List[Dict[str, float]] = []
+
+    it = 0
+    while len(prefix) < max_m:
+        rng, k1, k2 = jax.random.split(rng, 3)
+        batch = sample_fn(it)
+        cands = candidate_pool(k1, api.cfg.vocab_size, ccfg.n_candidates,
+                               ccfg.seed_tokens).astype(np.int32)
+        # pad to the fixed pool size by repeating the tail candidate:
+        # duplicates tie in L_q and argmin keeps the first occurrence, so
+        # the winner matches the reference's strict-improvement scan.
+        cands = np.concatenate(
+            [cands, np.repeat(cands[-1:], n_pool - len(cands))])
+        base, best, tok = step_fn(params, jnp.asarray(padded),
+                                  np.int32(len(prefix)),
+                                  jnp.asarray(cands.reshape(-1, chunk)),
+                                  batch)
+        base_err, best_err, best_tok = float(base), float(best), int(tok)
+
+        history.append({"iter": it, "len": len(prefix), "base_err": base_err,
+                        "best_err": best_err, "best_tok": best_tok,
+                        "ratio": best_err / max(base_err, 1e-30)})
+        if verbose:
+            print(f"[greedy] it={it} len={len(prefix)} L_q={base_err:.4g} "
+                  f"-> {best_err:.4g} (tok={best_tok}, "
+                  f"ratio={best_err / max(base_err, 1e-30):.3f})")
+        if best_err > ccfg.tau * base_err:
+            break                      # eq. (10) early stop
+        padded[len(prefix)] = best_tok
         prefix.append(best_tok)
         it += 1
 

@@ -43,21 +43,29 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
                 bm: int = 256, bn: int = 512, bk: int = 256,
                 interpret: bool = False) -> jax.Array:
     """x_int: (M,K) int8; w_int: (K,N) int8; s_x/z_x/s_w scalar fp32.
-    Returns fp32 (M,N) = (x - z_x) @ w * s_x * s_w."""
+    Returns fp32 (M,N) = (x - z_x) @ w * s_x * s_w.
+
+    M may be ragged (serving token counts): it is zero-padded up to the
+    tile internally and the output sliced back. K/N are weight dimensions —
+    static per checkpoint — and must tile exactly."""
     M, K = x_int.shape
     K2, N = w_int.shape
     assert K == K2
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
-        f"shapes ({M},{K},{N}) must tile by ({bm},{bk},{bn})"
+    assert N % bn == 0 and K % bk == 0, \
+        f"weight dims ({K},{N}) must tile by ({bk},{bn})"
+    Mp = -(-M // bm) * bm
+    if Mp != M:
+        # padded rows compute -z_x*colsum garbage; sliced off before return
+        x_int = jnp.pad(x_int, ((0, Mp - M), (0, 0)))
     n_k = K // bk
     colsum = jnp.sum(w_int.astype(jnp.int32), axis=0)   # (N,), tiny
     scale = (jnp.asarray(s_x, jnp.float32)
              * jnp.asarray(s_w, jnp.float32)).reshape(1)
     zx = jnp.asarray(z_x, jnp.float32).reshape(1)
 
-    grid = (M // bm, N // bn, n_k)
-    return pl.pallas_call(
+    grid = (Mp // bm, N // bn, n_k)
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
@@ -68,7 +76,8 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
             pl.BlockSpec((1,), lambda i, j, k: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_int, w_int, colsum, scale, zx)
+    return out[:M] if Mp != M else out

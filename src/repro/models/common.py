@@ -192,12 +192,16 @@ def _sdpa_dense(q: Array, k: Array, v: Array, mask: Optional[Array],
 def flash_attention_jnp(q: Array, k: Array, v: Array, cfg: ModelConfig,
                         causal: bool, prefix_len: int = 0,
                         q_chunk: int = FLASH_Q_CHUNK,
-                        kv_chunk: int = FLASH_KV_CHUNK) -> Array:
+                        kv_chunk: int = FLASH_KV_CHUNK,
+                        prefix_valid: Optional[Array] = None) -> Array:
     """Chunked online-softmax attention (pure jnp; memory O(chunk^2) instead
     of O(S*T)). Also the oracle for the Pallas flash kernel.
 
     q: (B,S,H,hd); k/v: (B,T,K,hd) where T = prefix_len + S for causal
     self-attention with a cushion prefix (prefix positions fully visible).
+    prefix_valid: optional (prefix_len,) bool — live-length mask for a
+    *padded* prefix (the compile-once search path); False rows are invisible
+    to every query.
     """
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -214,6 +218,10 @@ def flash_attention_jnp(q: Array, k: Array, v: Array, cfg: ModelConfig,
     kh = kp.reshape(B, nk, kv_chunk, K, hd)
     vh = vp.reshape(B, nk, kv_chunk, K, hd)
     scale = 1.0 / np.sqrt(hd)
+    kv_ok = None
+    if prefix_valid is not None:
+        kv_ok = jnp.pad(jnp.concatenate(
+            [prefix_valid, jnp.ones((T - prefix_len,), bool)]), (0, Tp - T))
 
     def q_block(qi, qc):
         # qc: (B, q_chunk, K, G, hd); online softmax over kv chunks
@@ -230,6 +238,8 @@ def flash_attention_jnp(q: Array, k: Array, v: Array, cfg: ModelConfig,
             iq = qi * q_chunk + jnp.arange(q_chunk)
             jk = ki * kv_chunk + jnp.arange(kv_chunk)
             valid = (jk < T)[None, :]
+            if kv_ok is not None:
+                valid = valid & kv_ok[jk][None, :]
             if causal:
                 vis = (jk[None, :] < prefix_len) | \
                       (jk[None, :] <= iq[:, None] + prefix_len)
@@ -272,12 +282,16 @@ def attention_full(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
                    prefix_kv: Optional[Params] = None,
                    causal: bool = True,
                    n_skip: int = 0,
-                   return_kv: bool = False):
+                   return_kv: bool = False,
+                   prefix_valid: Optional[Array] = None):
     """Full-sequence attention (train / prefill).
 
     positions: (S,) absolute positions of x's tokens (already offset past the
     cushion prefix). prefix_kv: dict(k,v) of shape (m, K, hd) — the
     CushionCache for this layer; fully visible to all queries.
+    prefix_valid: optional (m,) bool live-length mask for a prefix_kv padded
+    to a fixed shape (the compile-once greedy-search scoring path): rows
+    where it is False are masked out of every query's visibility.
     """
     B, S, _ = x.shape
     qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps,
@@ -300,12 +314,19 @@ def attention_full(p: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
 
     T = k.shape[1]
     if S * T >= FLASH_THRESHOLD:
-        out = flash_attention_jnp(q, k, v, cfg, causal=causal, prefix_len=m)
+        out = flash_attention_jnp(q, k, v, cfg, causal=causal, prefix_len=m,
+                                  prefix_valid=prefix_valid)
     else:
         if causal:
             i = jnp.arange(S)[:, None]
             j = jnp.arange(m + S)[None, :]
             mask = j < (i + m + 1)      # prefix (j<m) always visible
+            if prefix_valid is not None:
+                kv_ok = jnp.concatenate([prefix_valid, jnp.ones((S,), bool)])
+                mask = mask & kv_ok[None, :]
+        elif prefix_valid is not None:
+            kv_ok = jnp.concatenate([prefix_valid, jnp.ones((S,), bool)])
+            mask = jnp.broadcast_to(kv_ok[None, :], (S, m + S))
         else:
             mask = None
         out = _sdpa(q, k, v, mask, cfg)

@@ -25,6 +25,12 @@ Params = Dict[str, Any]
 ENC_SITES = ("qkv", "o", "mlp_in", "down")
 DEC_SITES = ("qkv", "o", "xq", "xo", "mlp_in", "down")
 
+# Greedy-search scoring fallback: decoder L_q depends on cross-attention
+# over the per-sample encoder states, which the shared-prefix KV cache
+# cannot capture; the search falls back to
+# `cushioncache.greedy_search_ref` (full forward per candidate).
+SUPPORTS_PREFIX_KV_SCORING = False
+
 
 def xattn_init(key, cfg: ModelConfig) -> Params:
     hd, H, K = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads

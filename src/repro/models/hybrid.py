@@ -28,6 +28,13 @@ Params = Dict[str, Any]
 
 SITES = ("qkv", "o", "mamba_in", "mamba_out", "mlp_in", "down")
 
+# Greedy-search scoring fallback: the hybrid prefix artifact includes Mamba
+# recurrent state, and a fixed-shape padded prefix cannot be masked out of a
+# recurrence (dead rows would corrupt the state). The search therefore falls
+# back to `cushioncache.greedy_search_ref` (full forward per candidate,
+# shapes grow with the prefix — one recompile per appended token).
+SUPPORTS_PREFIX_KV_SCORING = False
+
 
 def layout(cfg: ModelConfig):
     h = cfg.hybrid

@@ -26,6 +26,15 @@ Params = Dict[str, Any]
 
 SITES = C.ATTN_SITES + ("mlp_in", "down")
 
+# Attention-KV-only prefix artifact -> eligible for the greedy-search
+# KV-reuse scoring fast path (ModelAPI.score_candidates). Note the scoring
+# contract for MoE: expert capacity is derived from the *scored* sequence
+# ([candidate; sample]), and the "down" site qerr covers only that
+# sequence's expert traffic — prefix tokens never re-enter the experts,
+# matching deployment (the reference full-forward scorer routes prefix
+# tokens through the experts as a side effect of recomputing them).
+SUPPORTS_PREFIX_KV_SCORING = True
+
 
 def moe_init(key, cfg: ModelConfig) -> Params:
     moe = cfg.moe
@@ -140,13 +149,14 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
             qcfg: QuantConfig, *, scales: Optional[Params] = None,
             cushion: Optional[Params] = None, collect: bool = False,
             n_skip: int = 0, prepend_embeds: Optional[Array] = None,
-            remat: bool = True) -> Tuple[Array, Dict]:
+            remat: bool = True, prefix_valid: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Dict]:
     x = C.embed_tokens(params, tokens, cfg)
     if prepend_embeds is not None:
         x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
     S = x.shape[1]
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
-    positions = m + jnp.arange(S)
+    positions = (m if pos_offset is None else pos_offset) + jnp.arange(S)
     lscales = ({s: scales[s] for s in SITES} if scales is not None
                else C.placeholder_scales(SITES, cfg.n_layers))
     pre = cushion["kv"] if cushion is not None else _empty_prefix(cfg, x.dtype)
@@ -158,7 +168,8 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
         if collect:
             taps["block_in"] = Q.site_stats(h, n_skip)
         a = C.attention_full(lp["attn"], hn, cfg, qcfg, lsc, taps, positions,
-                             prefix_kv=lpre, causal=True, n_skip=n_skip)
+                             prefix_kv=lpre, causal=True, n_skip=n_skip,
+                             prefix_valid=prefix_valid)
         h = h + a
         hn = C.apply_norm(lp["ln2"], h, cfg)
         y, lb = apply_moe(lp["moe"], hn, cfg, qcfg, lsc, taps, n_skip)

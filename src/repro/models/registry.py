@@ -113,6 +113,94 @@ class ModelAPI:
         nb["tokens"] = toks
         return self.forward(params, nb, qcfg, **kw)
 
+    # ------------------------------------------------------------------
+    # Greedy-search scoring fast path (KV reuse; paper §4.1)
+    # ------------------------------------------------------------------
+    #
+    # Scoring contract: for families whose prefix artifact is pure attention
+    # KV (dense / moe / vlm), the shared prefix is prefilled into a KV cache
+    # ONCE per search iteration (`prefix_kv`); every candidate is then scored
+    # by forwarding [candidate; sample] against that cached block
+    # (`score_candidates`), and the no-candidate baseline by forwarding the
+    # sample alone (`prefix_qerr`). All three take a prefix padded to a fixed
+    # length plus a live-length scalar, so one compiled executable serves the
+    # whole search. Recurrent/cross-attention families (ssm / hybrid /
+    # encdec) cannot mask a padded prefix out of their state and fall back to
+    # `cushioncache.greedy_search_ref` (full forward per candidate).
+
+    @property
+    def supports_kv_scoring(self) -> bool:
+        return bool(getattr(self.mod, "SUPPORTS_PREFIX_KV_SCORING", False))
+
+    def prefix_kv(self, params, prefix_ids, qcfg: QuantConfig,
+                  scales: Optional[Params] = None) -> Params:
+        """Stacked per-layer KV {"k","v": (L, m, K, hd)} of a token prefix —
+        the shared artifact the scoring fast path prefills once per search
+        iteration. With a padded prefix, rows past the live length hold
+        garbage by construction; downstream consumers mask them via
+        `prefix_valid`."""
+        if not self.supports_kv_scoring:
+            raise NotImplementedError(
+                f"{self.cfg.family}: prefix artifact is not pure attention "
+                "KV; use cushioncache.greedy_search_ref")
+        cfg = self.cfg
+        mod = MO if cfg.family == Family.MOE else TR
+        m = prefix_ids.shape[0]
+        cache = mod.init_cache(cfg, 1, m)
+        _, cache, _ = mod.prefill(params, prefix_ids[None], cache, cfg, qcfg,
+                                  scales=scales)
+        return {"k": cache["k"][:, 0], "v": cache["v"][:, 0]}
+
+    def prefix_qerr(self, params, prefix_kv, live_len, batch,
+                    qcfg: QuantConfig, scales: Optional[Params] = None):
+        """L_q of the calibration sample given the cached prefix (the
+        search's base error). live_len: dynamic scalar — number of live rows
+        in the padded prefix_kv."""
+        valid = jnp.arange(prefix_kv["k"].shape[1]) < live_len
+        _, taps = self.forward(params, batch, qcfg, scales=scales,
+                               cushion={"kv": prefix_kv}, collect=True,
+                               n_skip=0, prefix_valid=valid,
+                               pos_offset=live_len, remat=False)
+        return TR.total_qerr(taps)
+
+    def score_candidates(self, params, prefix_kv, live_len, cand_ids, batch,
+                         qcfg: QuantConfig, scales: Optional[Params] = None):
+        """(N,) L_q of each candidate-extended prefix, reusing the shared
+        prefix KV: per candidate, one forward of [candidate; sample] with
+        the cached prefix attached (vmapped over candidates with the cache
+        unbatched — no O(N·m) prefix recompute, no N× cache copy). The
+        candidate position is excluded from L_q (n_skip=1), matching the
+        reference scorer's exclusion of all prefix positions."""
+        if not self.supports_kv_scoring:
+            raise NotImplementedError(
+                f"{self.cfg.family}: KV-reuse scoring unavailable; use "
+                "cushioncache.greedy_search_ref")
+        cfg = self.cfg
+        valid = jnp.arange(prefix_kv["k"].shape[1]) < live_len
+
+        def one(cand):
+            nb = dict(batch)
+            if cfg.family == Family.VLM:
+                # candidate sits between the cushion and the patches
+                ce = jnp.take(params["embed"]["w"], cand[None], axis=0)[None]
+                ce = jnp.broadcast_to(ce, (batch["patches"].shape[0],)
+                                      + ce.shape[1:])
+                nb["patches"] = jnp.concatenate(
+                    [ce.astype(batch["patches"].dtype), batch["patches"]],
+                    axis=1)
+            else:
+                nb["tokens"] = jnp.concatenate(
+                    [jnp.broadcast_to(cand[None, None],
+                                      (batch["tokens"].shape[0], 1)),
+                     batch["tokens"]], axis=1)
+            _, taps = self.forward(params, nb, qcfg, scales=scales,
+                                   cushion={"kv": prefix_kv}, collect=True,
+                                   n_skip=1, prefix_valid=valid,
+                                   pos_offset=live_len, remat=False)
+            return TR.total_qerr(taps)
+
+        return jax.vmap(one)(cand_ids)
+
     def extract_cushion(self, params, prefix_ids, batch,
                         qcfg: QuantConfig) -> Params:
         """Turn a searched token prefix into the deployment Cushion artifact

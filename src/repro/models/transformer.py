@@ -29,6 +29,11 @@ Params = Dict[str, Any]
 
 SITES = C.ATTN_SITES + C.MLP_SITES  # ("qkv", "o", "mlp_in", "down")
 
+# The prefix deployment artifact is pure attention KV, so the greedy-search
+# fast path can prefill the shared prefix once and score every candidate
+# against the cached block (ModelAPI.score_candidates).
+SUPPORTS_PREFIX_KV_SCORING = True
+
 
 def layer_init(key, cfg: ModelConfig) -> Params:
     k1, k2 = jax.random.split(key)
@@ -48,13 +53,15 @@ def init_params(cfg: ModelConfig, rng) -> Params:
 
 def _block(lp: Params, x: Array, cfg: ModelConfig, qcfg: QuantConfig,
            lsc: Optional[Params], lpre: Optional[Params], positions: Array,
-           collect: bool, n_skip: int) -> Tuple[Array, Dict]:
+           collect: bool, n_skip: int,
+           prefix_valid: Optional[Array] = None) -> Tuple[Array, Dict]:
     taps: Optional[Dict] = {} if collect else None
     h = C.apply_norm(lp["ln1"], x, cfg)
     if collect:
         taps["block_in"] = Q.site_stats(x, n_skip)
     a = C.attention_full(lp["attn"], h, cfg, qcfg, lsc, taps, positions,
-                         prefix_kv=lpre, causal=True, n_skip=n_skip)
+                         prefix_kv=lpre, causal=True, n_skip=n_skip,
+                         prefix_valid=prefix_valid)
     x = x + a
     h = C.apply_norm(lp["ln2"], x, cfg)
     m = C.apply_mlp(lp["mlp"], h, cfg, qcfg, lsc, taps, n_skip)
@@ -67,16 +74,22 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
             qcfg: QuantConfig, *, scales: Optional[Params] = None,
             cushion: Optional[Params] = None, collect: bool = False,
             n_skip: int = 0, prepend_embeds: Optional[Array] = None,
-            remat: bool = True) -> Tuple[Array, Dict]:
+            remat: bool = True, prefix_valid: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Dict]:
     """Full-sequence causal forward. cushion: {"kv": {"k": (L,m,K,hd), ...}}.
     prepend_embeds (B,P,D): extra embeddings placed before the token
-    embeddings (VLM patches / greedy-search candidate activations)."""
+    embeddings (VLM patches / greedy-search candidate activations).
+
+    prefix_valid / pos_offset serve the compile-once search scoring path:
+    the cushion KV is padded to a fixed shape, prefix_valid ((m,) bool)
+    masks the dead rows, and pos_offset (dynamic scalar) replaces the static
+    prefix length as the RoPE position origin of x's tokens."""
     x = C.embed_tokens(params, tokens, cfg)
     if prepend_embeds is not None:
         x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
     S = x.shape[1]
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
-    positions = m + jnp.arange(S)
+    positions = (m if pos_offset is None else pos_offset) + jnp.arange(S)
 
     if scales is None:
         lscales = C.placeholder_scales(SITES, cfg.n_layers)
@@ -88,7 +101,7 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
     def body(h, xs):
         lp, lsc, lpre = xs
         h, taps = _block(lp, h, cfg, qcfg, lsc, lpre, positions, collect,
-                         n_skip)
+                         n_skip, prefix_valid=prefix_valid)
         return h, taps
 
     if remat:

@@ -19,6 +19,10 @@ Array = Any
 Params = Dict[str, Any]
 
 SITES = T.SITES
+# LM backbone with a pure-KV prefix artifact: the greedy-search fast path
+# prefills the token prefix once (no patches — the cushion sits before
+# them) and scores candidates as [cand_embed; patches; text] against it.
+SUPPORTS_PREFIX_KV_SCORING = True
 init_params = T.init_params
 init_cache = T.init_cache
 cushion_zeros = T.cushion_zeros
@@ -30,11 +34,13 @@ placeholder_all_scales = T.placeholder_all_scales
 def forward(params: Params, tokens: Array, cfg: ModelConfig,
             qcfg: QuantConfig, *, patches: Array,
             scales: Optional[Params] = None, cushion: Optional[Params] = None,
-            collect: bool = False, n_skip: int = 0, remat: bool = True):
+            collect: bool = False, n_skip: int = 0, remat: bool = True,
+            prefix_valid=None, pos_offset=None):
     """tokens: (B, S_text); patches: (B, P, D). Sequence = [patches; text]."""
     return T.forward(params, tokens, cfg, qcfg, scales=scales,
                      cushion=cushion, collect=collect, n_skip=n_skip,
-                     prepend_embeds=patches, remat=remat)
+                     prepend_embeds=patches, remat=remat,
+                     prefix_valid=prefix_valid, pos_offset=pos_offset)
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,

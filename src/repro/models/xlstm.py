@@ -30,6 +30,12 @@ Params = Dict[str, Any]
 
 SITES = ("m_in", "m_out", "s_in", "s_out")
 
+# Greedy-search scoring fallback: the prefix artifact is recurrent state,
+# not attention KV — a fixed-shape padded prefix cannot be masked out of the
+# recurrence, so the search falls back to `cushioncache.greedy_search_ref`
+# (full forward per candidate, one recompile per appended token).
+SUPPORTS_PREFIX_KV_SCORING = False
+
 
 def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
     inner = cfg.ssm.expand * cfg.d_model if cfg.ssm else 2 * cfg.d_model

@@ -1,0 +1,61 @@
+"""Compile-count instrumentation built on ``jax.monitoring`` events.
+
+XLA emits a ``/jax/core/compile/backend_compile_duration`` event per backend
+compilation. The absolute multiplier per ``jit`` cache miss is a jax-version
+detail (helper executables also compile), but the count is deterministic for
+a fixed program, which is all the search/bench assertions need: *constant*
+compile count independent of prefix length, and fast-path count « reference
+count.
+
+Usage::
+
+    with count_compiles() as c:
+        run_search(...)
+    print(c.count)
+
+Counters nest (each active counter sees every compile event), so a bench can
+hold an outer counter while tests open inner ones.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List
+
+import jax
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_active: List["CompileCounter"] = []
+_registered = False
+
+
+@dataclasses.dataclass
+class CompileCounter:
+    count: int = 0
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if event == COMPILE_EVENT:
+        for c in _active:
+            c.count += 1
+
+
+@contextlib.contextmanager
+def count_compiles() -> Iterator[CompileCounter]:
+    """Count backend compilations that happen inside the ``with`` block.
+
+    The listener registers once per process (jax.monitoring has no
+    unregister API across versions); counters activate/deactivate via the
+    ``_active`` stack instead.
+    """
+    global _registered
+    if not _registered:
+        jax.monitoring.register_event_duration_secs_listener(_listener)
+        _registered = True
+    c = CompileCounter()
+    _active.append(c)
+    try:
+        yield c
+    finally:
+        _active.remove(c)

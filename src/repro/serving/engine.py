@@ -37,6 +37,24 @@ class GenerationResult:
     tpot_ms: float
 
 
+def bucket_steps(n_steps: int) -> int:
+    """Round a decode-step budget up to the next power of two (min 8).
+
+    The scanned generation loop compiles one executable per distinct step
+    count; bucketing maps a varying-budget frontend onto a handful of
+    executables instead of one per request size. The surplus steps run and
+    are sliced away — scan steps are sequential, so the first ``n_steps``
+    outputs are unaffected (cache writes past ``max_seq`` clamp into the
+    last row, which only ever corrupts positions read by the discarded
+    surplus steps)."""
+    if n_steps <= 0:
+        return 0
+    b = 8
+    while b < n_steps:
+        b *= 2
+    return b
+
+
 class Engine:
     """Holds compiled prefill/decode executables for one (model, quant,
     cushion, kv_dtype) configuration."""
@@ -80,9 +98,10 @@ class Engine:
                                        None, length=n_steps)
             return jnp.concatenate([tok0[None], toks], axis=0)
 
-        # n_steps/greedy are static: each distinct token budget compiles its
-        # own scan. Fine for benches and fixed-budget serving; a
-        # varying-budget frontend should bucket n_tokens to amortize.
+        # n_steps/greedy are static: each distinct scan length compiles its
+        # own executable. `generate` buckets the requested budget
+        # (bucket_steps) so a varying-budget frontend compiles one scan per
+        # bucket, not per request size.
         self._gen_loop = jax.jit(gen_loop, static_argnums=(5, 6))
 
     def _init_cache(self, batch: int):
@@ -107,9 +126,16 @@ class Engine:
         t1 = time.perf_counter()
         g = bool(greedy or rng is None)
         key = rng if rng is not None else jax.random.PRNGKey(0)
+        n_steps = max(0, n_tokens - 1)
+        # bucketed scan length: requests in the same bucket share one
+        # compiled executable; surplus steps are sliced away below.
         toks = self._gen_loop(self.params, tok, pos, cache, key,
-                              max(0, n_tokens - 1), g)
+                              bucket_steps(n_steps), g)
+        if toks.shape[0] > 1 + n_steps:
+            toks = toks[:1 + n_steps]
         toks.block_until_ready()    # single host sync for the whole loop
+        # tpot charges the (bucket-padded) loop to the *delivered* tokens —
+        # honest latency per useful token, slightly pessimistic off-bucket.
         tpot = (time.perf_counter() - t1) * 1e3 / max(1, n_tokens - 1)
         return GenerationResult(tokens=np.asarray(toks).T, ttft_ms=ttft,
                                 tpot_ms=tpot)

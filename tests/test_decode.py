@@ -152,3 +152,27 @@ def test_sampling_under_scan(rng):
     b = eng.generate(batch, 5, greedy=False, rng=jax.random.PRNGKey(3))
     np.testing.assert_array_equal(a.tokens, b.tokens)
     assert a.tokens.shape == (2, 5)
+
+
+def test_token_budget_bucketing(rng):
+    """Distinct token budgets in the same bucket share one compiled scan;
+    sliced outputs still match the per-token host loop exactly."""
+    from repro.monitoring import count_compiles
+    from repro.serving.engine import bucket_steps
+
+    assert [bucket_steps(n) for n in (0, 1, 7, 8, 9, 100)] == \
+        [0, 8, 8, 8, 16, 128]
+
+    cfg = reduced(get_config("smollm-360m"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 12)
+    eng = Engine(api, params, QN, max_seq=64)
+    first = eng.generate(batch, 6)          # compiles the 8-step bucket
+    with count_compiles() as c:
+        second = eng.generate(batch, 9)     # same bucket -> cache hit
+    assert c.count == 0, c.count
+    assert first.tokens.shape == (2, 6)
+    assert second.tokens.shape == (2, 9)
+    looped = eng.generate_py(batch, 9)
+    np.testing.assert_array_equal(second.tokens, looped.tokens)

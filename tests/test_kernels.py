@@ -113,3 +113,20 @@ def test_qdot_pallas_matches_int8_reference():
     b = Q.true_int_dot(x, w, qcfg, site)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("M,bm", [(5, 32), (77, 32), (300, 128)])
+def test_w8a8_matmul_ragged_m(M, bm):
+    """Ragged token counts: M is padded to the tile internally and the
+    output sliced back — serving batches no longer need tile-exact M."""
+    rng = np.random.RandomState(M)
+    x = jnp.asarray(rng.randint(-127, 128, (M, 256)), jnp.int8)
+    w = jnp.asarray(rng.randint(-127, 128, (256, 128)), jnp.int8)
+    s_x, z_x, s_w = 0.011, 3.0, 0.04
+    out = w8a8_matmul(x, w, s_x, z_x, s_w, bm=bm, bn=128, bk=128,
+                      interpret=True)
+    ref = R.w8a8_matmul_ref(x, w, jnp.float32(s_x), jnp.float32(z_x),
+                            jnp.float32(s_w))
+    assert out.shape == (M, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-5)

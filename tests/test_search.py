@@ -1,0 +1,205 @@
+"""Greedy-search fast path (compile-once, KV-reuse candidate scoring):
+
+* `ModelAPI.score_candidates` / `prefix_qerr` L_q equivalence against the
+  reference full-forward scorer (`forward_with_token_prefix`), for dense,
+  VLM, and MoE (the MoE "down"-site contract: prefix expert traffic is a
+  candidate-independent additive offset in the reference scorer);
+* `greedy_search` vs `greedy_search_ref` token-for-token prefix parity on
+  paper_tiny (per-token dynamic quantization, where the two scorers are
+  mathematically identical);
+* compile-count constancy: the fast search compiles the same number of
+  executables regardless of `max_prefix_len`;
+* the documented fallback for families without attention-KV-only prefix
+  artifacts (ssm/hybrid/encdec).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CushionConfig, QuantConfig, get_config, reduced
+from repro.core import cushioncache as CC
+from repro.models.registry import build
+from repro.monitoring import count_compiles
+
+QN = QuantConfig(mode="none")
+QP = QuantConfig(mode="ptoken_dynamic")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    return api, params
+
+
+@pytest.fixture(scope="module")
+def tiny_outlier(tiny):
+    """paper_tiny with the planted massive-activation pathway (same surgery
+    as tests/test_cushion.py) so candidate ranking is meaningful."""
+    api, _ = tiny
+    params = api.init_params(jax.random.PRNGKey(0))
+    w = params["layers"]["mlp"]["w_down"]
+    params["layers"]["mlp"]["w_down"] = w.at[0, :8, 5].set(300.0)
+    return api, params
+
+
+def _sample(api, i, n=32):
+    return api.make_batch(jax.random.PRNGKey(1000 + i), 1, n)
+
+
+def _ref_scores(api, params, prefix, cands, batch, qcfg):
+    batched = CC.make_batched_qerr_fn(api, qcfg)
+    prefixes = jnp.asarray([list(prefix) + [int(c)] for c in cands],
+                           jnp.int32)
+    return np.asarray(batched(params, prefixes, batch))
+
+
+@pytest.mark.parametrize("qcfg,rtol", [(QN, 1e-4), (QP, 2e-3)],
+                         ids=["none", "ptoken"])
+def test_score_candidates_matches_full_forward(tiny, qcfg, rtol):
+    """KV-reuse scoring == full-forward scoring for position-local quant
+    modes (clean / per-token dynamic), with a padded prefix and live
+    length. (Per-token fake-quant rounds at .5 boundaries, so last-ulp
+    scale differences can flip single elements — hence the looser rtol.)"""
+    api, params = tiny
+    batch = _sample(api, 0)
+    prefix = [1, 7]
+    padded = jnp.asarray(prefix + [0, 0], jnp.int32)     # max_m = 4, live 2
+    cands = np.asarray([5, 9, 100, 200], np.int32)
+
+    pkv = api.prefix_kv(params, padded, qcfg)
+    fast = np.asarray(api.score_candidates(
+        params, pkv, np.int32(len(prefix)), jnp.asarray(cands), batch, qcfg))
+    ref = _ref_scores(api, params, prefix, cands, batch, qcfg)
+    np.testing.assert_allclose(fast, ref, rtol=rtol)
+
+    base_fast = float(api.prefix_qerr(params, pkv, np.int32(len(prefix)),
+                                      batch, qcfg))
+    single = CC.make_qerr_fn(api, qcfg)
+    base_ref = float(single(params, jnp.asarray(prefix, jnp.int32), batch))
+    np.testing.assert_allclose(base_fast, base_ref, rtol=rtol)
+
+
+def test_score_candidates_pt_dynamic_deployment_ranges(tiny):
+    """Per-tensor *dynamic* mode: the fast path derives activation ranges
+    from the scored sequence only (deployment behaviour — cached prefix
+    tokens never re-enter the linears), while the reference recompute folds
+    prefix rows into every range. Scores agree to O(1%), not exactly."""
+    api, params = tiny
+    qcfg = QuantConfig(mode="pt_dynamic")
+    batch = _sample(api, 1)
+    prefix = [1, 7]
+    padded = jnp.asarray(prefix + [0, 0], jnp.int32)
+    cands = np.asarray([5, 9, 100, 200], np.int32)
+    pkv = api.prefix_kv(params, padded, qcfg)
+    fast = np.asarray(api.score_candidates(
+        params, pkv, np.int32(2), jnp.asarray(cands), batch, qcfg))
+    ref = _ref_scores(api, params, prefix, cands, batch, qcfg)
+    assert np.all(np.isfinite(fast))
+    np.testing.assert_allclose(fast, ref, rtol=0.1)
+
+
+def test_score_candidates_vlm(tiny):
+    """VLM: the candidate sits between the cushion and the patches; patch
+    positions count toward L_q exactly as in the reference scorer."""
+    cfg = reduced(get_config("internvl2-26b"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = api.make_batch(jax.random.PRNGKey(5), 1, 24)
+    prefix = [1]
+    padded = jnp.asarray(prefix + [0, 0], jnp.int32)
+    cands = np.asarray([2, 30, 99], np.int32)
+    pkv = api.prefix_kv(params, padded, QN)
+    fast = np.asarray(api.score_candidates(
+        params, pkv, np.int32(1), jnp.asarray(cands), batch, QN))
+    ref = _ref_scores(api, params, prefix, cands, batch, QN)
+    np.testing.assert_allclose(fast, ref, rtol=1e-4)
+
+
+def test_score_candidates_moe_contract(tiny):
+    """MoE scoring contract: prefix tokens never re-enter the experts in
+    the fast path, so the reference's "down"-site L_q exceeds it by a
+    candidate-INDEPENDENT offset (prefix expert slots precede and ignore
+    the candidate). Ranking — the argmin the search consumes — matches."""
+    cfg = reduced(get_config("olmoe-1b-7b"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = api.make_batch(jax.random.PRNGKey(6), 1, 24)
+    prefix = [1, 4]
+    padded = jnp.asarray(prefix + [0], jnp.int32)
+    cands = np.asarray([2, 30, 99, 7], np.int32)
+    pkv = api.prefix_kv(params, padded, QP)
+    fast = np.asarray(api.score_candidates(
+        params, pkv, np.int32(2), jnp.asarray(cands), batch, QP))
+    ref = _ref_scores(api, params, prefix, cands, batch, QP)
+    diff = ref - fast
+    assert np.all(diff > -1e-4)            # reference ≥ fast (extra traffic)
+    assert np.std(diff) < 1e-3 * max(np.mean(diff), 1e-9) + 1e-4
+    assert int(np.argmin(fast)) == int(np.argmin(ref))
+
+
+def test_greedy_fast_matches_ref_tokens(tiny_outlier):
+    """Acceptance: identical prefix token sequence, fast vs reference, on
+    paper_tiny (per-token dynamic quantization)."""
+    api, params = tiny_outlier
+    ccfg = CushionConfig(max_prefix_len=4, tau=1.5, n_candidates=16,
+                         seed_tokens=(1,))
+    fast = CC.greedy_search(api, params, lambda i: _sample(api, i), QP, ccfg,
+                            jax.random.PRNGKey(0), chunk=8, verbose=False)
+    ref = CC.greedy_search_ref(api, params, lambda i: _sample(api, i), QP,
+                               ccfg, jax.random.PRNGKey(0), chunk=8,
+                               verbose=False)
+    np.testing.assert_array_equal(fast.prefix_ids, ref.prefix_ids)
+    assert [h["best_tok"] for h in fast.history] == \
+        [h["best_tok"] for h in ref.history]
+
+
+def test_search_compile_count_constant(tiny):
+    """The fast search compiles a constant number of executables regardless
+    of max_prefix_len (the reference compiles two scorers per appended
+    token). A warm-up search populates the process-global jit caches shared
+    by both runs (rng helpers, sampling) so the counters see exactly the
+    per-search compiles."""
+    api, params = tiny
+
+    def run(max_m):
+        ccfg = CushionConfig(max_prefix_len=max_m, tau=1.5, n_candidates=8,
+                             seed_tokens=(1,))
+        return CC.greedy_search(api, params,
+                                lambda i: _sample(api, i, n=16), QN, ccfg,
+                                jax.random.PRNGKey(0), chunk=8,
+                                verbose=False)
+
+    run(2)                                   # warm shared caches
+    with count_compiles() as c_short:
+        run(3)
+    with count_compiles() as c_long:
+        run(6)
+    assert c_short.count == c_long.count, (c_short.count, c_long.count)
+    # and the count is O(1): the fused search step, not per-iteration work
+    assert c_long.count <= 4, c_long.count
+
+
+def test_unsupported_family_falls_back(tiny):
+    """ssm/hybrid/encdec: score_candidates refuses (no attention-KV-only
+    prefix artifact) and greedy_search transparently delegates to the
+    reference implementation."""
+    cfg = reduced(get_config("xlstm-350m"), dtype="float32")
+    api = build(cfg)
+    assert not api.supports_kv_scoring
+    params = api.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        api.score_candidates(params, None, 0,
+                             jnp.asarray([1], jnp.int32),
+                             api.make_batch(jax.random.PRNGKey(0), 1, 8), QN)
+    ccfg = CushionConfig(max_prefix_len=2, tau=1.5, n_candidates=8,
+                         seed_tokens=(1,))
+    res = CC.greedy_search(api, params,
+                           lambda i: api.make_batch(
+                               jax.random.PRNGKey(i), 1, 16),
+                           QN, ccfg, jax.random.PRNGKey(0), chunk=8,
+                           verbose=False)
+    assert 1 <= len(res.prefix_ids) <= 2
+    assert res.history
