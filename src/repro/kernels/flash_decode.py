@@ -17,9 +17,17 @@ KV-chunk axis innermost and sequential: online-softmax partial (max, sum,
 acc) statistics live in VMEM scratch and are combined across chunks exactly
 like flash-decoding's split-KV reduction.
 
-Masking comes from the live ``pos`` scalar: chunks entirely beyond ``pos``
-skip their compute via ``pl.when`` (their DMA still happens — the price of
-static shapes), and the tail chunk is masked per-position.
+Masking comes from the live ``pos`` value — a scalar shared by the batch or
+a per-row ``(B,)`` vector (the continuous-batching scheduler gives every
+cache slot its own decode position): chunks entirely beyond the row's
+``pos`` skip their compute via ``pl.when`` (their DMA still happens — the
+price of static shapes), and the tail chunk is masked per-position. A row
+with ``pos < 0`` is *retired*: it attends to nothing (fp mode -> zeros) or
+to the always-visible cushion block only (int8+cushion mode). The
+continuous-batching scheduler compute-masks dead slots by *freezing* their
+pos (a negative pos would make the slot's cache write clamp onto the
+cushion rows); pos < 0 is the kernel-level contract for callers that
+never write, and the jnp fallback/oracle honor the same semantics.
 
 int8-KV variant
 ---------------
@@ -132,11 +140,16 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     q: (B, H, hd) — the one new query per sequence.
     k/v: (B, Smax, K, hd) cache in storage layout; fp, or int8 when
         k_scale/v_scale ((K,) fp32 per-head dequant scales) are given.
-    pos: () int32 — absolute position of the just-written token; only cache
-        positions <= pos are attended.
+    pos: () or (B,) int32 — absolute position of each row's just-written
+        token; only cache positions <= pos[b] are attended by row b. A
+        scalar is shared by the whole batch; a vector gives every row its
+        own decode position (continuous batching: slots prefilled at
+        different times decode in lock-step). pos[b] < 0 marks a retired
+        row: it attends nothing (fp) or the cushion block only (int8).
     kc/vc: (m, K, hd) fp cushion prefix block covering absolute positions
-        [0:m) (int8 caches only; requires pos >= m). Batch-free — the
-        CushionCache is shared across sequences.
+        [0:m) (int8 caches only; requires pos >= m for live rows; the block
+        stays visible to retired rows). Batch-free — the CushionCache is
+        shared across sequences.
 
     Returns (B, H, hd). VMEM working set per program:
         G*hd (q) + 2*bkv*hd (kv tile) + G*bkv (p) + G*hd fp32 (acc).
@@ -172,11 +185,13 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
             padc = ((0, mp - m), (0, 0), (0, 0))
             kc = jnp.pad(kc, padc)
             vc = jnp.pad(vc, padc)
-    posa = jnp.asarray(pos, jnp.int32).reshape(1)
+    # scalar pos -> broadcast; (B,) pos -> one entry per batch row, routed
+    # to its (batch, kv-head) programs through the index map below
+    posa = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
     scale = 1.0 / np.sqrt(hd)
 
     in_specs = [
-        pl.BlockSpec((1,), lambda b, j: (0,)),                            # pos
+        pl.BlockSpec((1,), lambda b, j: (b // K,)),                       # pos
         pl.BlockSpec((1, 1, Gp, hd), lambda b, j: (b // K, b % K, 0, 0)), # q
         pl.BlockSpec((1, bkv, 1, hd), lambda b, j: (b // K, j, b % K, 0)),
         pl.BlockSpec((1, bkv, 1, hd), lambda b, j: (b // K, j, b % K, 0)),

@@ -86,6 +86,8 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, pos,
                             interpret: bool = False) -> jax.Array:
     """Model-level entry for the split-KV decode kernel. q: (B,H,hd);
     k/v: the (B,Smax,K,hd) cache (int8 when scales given, cushion block in
-    kc/vc). Returns (B,H,hd)."""
+    kc/vc); pos: () shared or (B,) per-row decode positions (continuous
+    batching — rows with pos < 0 are retired/compute-masked). Returns
+    (B,H,hd)."""
     return flash_decode(q, k, v, pos, k_scale=k_scale, v_scale=v_scale,
                         kc=kc, vc=vc, interpret=interpret)

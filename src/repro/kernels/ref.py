@@ -75,27 +75,37 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos,
 
     q: (B,H,hd); k/v: (B,Smax,K,hd) — fp, or int8 with per-head dequant
     scales k_scale/v_scale (K,). kc/vc: (m,K,hd) fp cushion block covering
-    absolute positions [0:m) (int8 caches keep the sink block intact).
-    Attends to positions [0:pos]. Returns (B,H,hd) in q.dtype.
+    absolute positions [0:m) (int8 caches keep the sink block intact; the
+    block is visible to every row regardless of pos — the sink is never
+    evicted). pos: () or (B,) — row b attends positions [0:pos[b]] (plus
+    the cushion block when present). pos[b] < 0 marks a retired row: with
+    no cushion it attends nothing and outputs zeros. Returns (B,H,hd) in
+    q.dtype.
     """
     B, H, hd = q.shape
     Smax, K = k.shape[1], k.shape[2]
     G = H // K
+    m = 0 if kc is None else kc.shape[0]
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     if k_scale is not None:
         kf = kf * k_scale.astype(jnp.float32)[None, None, :, None]
         vf = vf * v_scale.astype(jnp.float32)[None, None, :, None]
-    if kc is not None and kc.shape[0]:
-        m = kc.shape[0]
+    if m:
         kcb = jnp.broadcast_to(kc.astype(jnp.float32)[None], (B,) + kc.shape)
         vcb = jnp.broadcast_to(vc.astype(jnp.float32)[None], (B,) + vc.shape)
         kf = jnp.concatenate([kcb, kf[:, m:]], axis=1)
         vf = jnp.concatenate([vcb, vf[:, m:]], axis=1)
     qg = q.reshape(B, K, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgh,btkh->bkgt", qg, kf) / np.sqrt(hd)
-    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
-    s = jnp.where(mask, s, -1e30)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    idx = jnp.arange(Smax)
+    valid = idx[None, :] <= posv[:, None]              # (B, Smax)
+    if m:
+        valid = valid | (idx < m)[None, :]             # cushion never masked
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkh->bkgh", w, vf)
+    # fully-masked rows (retired, no cushion): zeros, not a uniform average
+    out = jnp.where(jnp.any(valid, axis=1)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, hd).astype(q.dtype)

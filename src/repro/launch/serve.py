@@ -4,10 +4,17 @@ optional CushionCache artifact.
     python -m repro.launch.serve --arch paper_tiny --quant pt_static \
         --cushion artifacts/cushion.npz --tokens 64
 
-The decode loop is device-resident (one jitted lax.scan — no per-token host
-sync); --kv-dtype int8 serves from a quantized KV cache with the cushion
-prefix kept intact in fp. --bench-json PATH appends a TTFT/TPOT trajectory
-point for perf regression tracking.
+The default (static) mode runs one Engine batch: device-resident decode
+(one jitted lax.scan — no per-token host sync); --kv-dtype int8 serves
+from a quantized KV cache with the cushion prefix kept intact in fp.
+
+--mode continuous replays a Poisson-arrival request trace through the
+continuous-batching scheduler (``serving.scheduler.ContinuousEngine``):
+requests arrive at --rate req/s, are admitted into a pool of --slots cache
+slots as they free up, and decode in lock-step with per-slot positions.
+Prints per-request TTFT/TPOT plus aggregate tokens/s, latency percentiles
+and slot occupancy. --bench-json PATH appends a trajectory point for perf
+regression tracking in either mode.
 """
 from __future__ import annotations
 
@@ -24,6 +31,75 @@ from repro.configs import QuantConfig, get_config, reduced
 from repro.data.pipeline import Pipeline, SyntheticCorpus
 from repro.models.registry import build
 from repro.serving.engine import Engine
+from repro.serving.scheduler import ContinuousEngine, Request
+
+
+def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
+                  prompt_lens, budgets) -> list:
+    """Poisson-arrival request trace: exponential inter-arrival gaps at
+    ``rate`` req/s, prompts cycling through ``prompt_lens`` (total
+    positions) and budgets through ``budgets``."""
+    rs = np.random.RandomState(rng_seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rs.exponential(1.0 / rate)) if rate > 0 else 0.0
+        reqs.append(Request(
+            uid=i,
+            batch=api.make_batch(jax.random.PRNGKey(rng_seed + 7 * i + 1), 1,
+                                 int(prompt_lens[i % len(prompt_lens)])),
+            max_new_tokens=int(budgets[i % len(budgets)]),
+            arrival_s=t))
+    return reqs
+
+
+def run_continuous(api, params, qcfg, args, bench_path=None):
+    reqs = poisson_trace(api, args.seed, args.n_requests, args.rate,
+                         prompt_lens=(args.prompt_len, args.prompt_len + 8),
+                         budgets=(args.tokens, max(1, args.tokens // 2)))
+    eng = ContinuousEngine(api, params, qcfg, n_slots=args.slots,
+                           max_seq=args.prompt_len + 8 + args.tokens + 32)
+    if bench_path:
+        eng.run(reqs)           # warm/compile pass; measure steady state
+    outs = eng.run(reqs)
+    total = sum(len(o.tokens) for o in outs)
+    span = max(o.finished_s for o in outs) - min(r.arrival_s for r in reqs)
+    lat = np.asarray([o.latency_s for o in outs])
+    tps = total / max(span, 1e-9)
+    occ = eng.stats.occupancy()
+    for o in outs:
+        print(f"[serve]   req {o.uid}: slot {o.slot} n={len(o.tokens)} "
+              f"TTFT={o.ttft_ms:.1f}ms TPOT={o.tpot_ms:.2f}ms "
+              f"latency={o.latency_s * 1e3:.0f}ms")
+    print(f"[serve] continuous: {len(outs)} reqs, {total} tokens, "
+          f"{tps:.1f} tok/s, p50={np.percentile(lat, 50) * 1e3:.0f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.0f}ms occupancy={occ:.2f}")
+    if bench_path:
+        point = {"mode": "continuous", "arch": args.arch,
+                 "quant": args.quant, "slots": args.slots,
+                 "rate": args.rate, "n_requests": args.n_requests,
+                 "tokens_per_s": tps,
+                 "p50_latency_s": float(np.percentile(lat, 50)),
+                 "p99_latency_s": float(np.percentile(lat, 99)),
+                 "occupancy": occ, **eng.stats.as_dict()}
+        _append_point(bench_path, point)
+    return outs
+
+
+def _append_point(path: str, point: dict) -> None:
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            hist = prev if isinstance(prev, list) else [prev]
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"[serve] WARNING: could not read {path} "
+                  f"({e}); starting a fresh trajectory")
+    hist.append(point)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
+    print(f"[serve] bench point -> {path}")
 
 
 def main(argv=None):
@@ -31,17 +107,28 @@ def main(argv=None):
     ap.add_argument("--arch", default="paper_tiny")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quant", default="none")
+    ap.add_argument("--mode", default="static",
+                    choices=["static", "continuous"],
+                    help="static: one Engine batch; continuous: Poisson "
+                         "trace through the slot-pool scheduler")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous mode: cache-slot pool size")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="continuous mode: Poisson arrival rate (req/s)")
+    ap.add_argument("--n-requests", type=int, default=8,
+                    help="continuous mode: trace length")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from latest checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
                     help="KV-cache storage precision (int8 halves decode "
-                         "HBM traffic; cushion prefix stays fp)")
+                         "HBM traffic; cushion prefix stays fp; static "
+                         "mode only — the continuous pool serves fp KV)")
     ap.add_argument("--bench-json", default=None,
-                    help="append a {ttft,tpot} trajectory point to this file")
+                    help="append a trajectory point to this file")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -60,12 +147,19 @@ def main(argv=None):
             params = ckpt.restore(step, like=like)["params"]
             print(f"[serve] restored step {step}")
 
+    qcfg = QuantConfig(mode=args.quant)
+    if args.mode == "continuous":
+        if args.kv_dtype != "fp":
+            ap.error("--mode continuous serves fp KV pools only "
+                     "(per-slot int8 scale calibration is future work)")
+        return run_continuous(api, params, qcfg, args,
+                              bench_path=args.bench_json)
+
     corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
     pipe = Pipeline(corpus, batch=args.batch, seq_len=args.prompt_len,
                     seed=args.seed + 1)
     batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(0).items()}
 
-    qcfg = QuantConfig(mode=args.quant)
     eng = Engine(api, params, qcfg,
                  max_seq=args.prompt_len + args.tokens + 32,
                  kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype)
@@ -78,23 +172,11 @@ def main(argv=None):
           f"TTFT={res.ttft_ms:.1f}ms TPOT={res.tpot_ms:.2f}ms")
     print("[serve] sample:", res.tokens[0][:16].tolist())
     if args.bench_json:
-        point = {"arch": args.arch, "quant": args.quant,
-                 "kv_dtype": args.kv_dtype, "batch": args.batch,
-                 "prompt_len": args.prompt_len, "tokens": args.tokens,
-                 "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms}
-        hist = []
-        if os.path.exists(args.bench_json):
-            try:
-                with open(args.bench_json) as f:
-                    prev = json.load(f)
-                hist = prev if isinstance(prev, list) else [prev]
-            except (json.JSONDecodeError, OSError) as e:
-                print(f"[serve] WARNING: could not read {args.bench_json} "
-                      f"({e}); starting a fresh trajectory")
-        hist.append(point)
-        with open(args.bench_json, "w") as f:
-            json.dump(hist, f, indent=1)
-        print(f"[serve] bench point -> {args.bench_json}")
+        _append_point(args.bench_json, {
+            "mode": "static", "arch": args.arch, "quant": args.quant,
+            "kv_dtype": args.kv_dtype, "batch": args.batch,
+            "prompt_len": args.prompt_len, "tokens": args.tokens,
+            "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms})
     return res
 
 

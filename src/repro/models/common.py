@@ -371,7 +371,13 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
                         scales: Optional[Params], taps: Optional[Dict]
                         ) -> Tuple[Array, Params]:
     """Single-token decode over one layer's KV-cache dict (the serving fast
-    path). x: (B,1,D); pos: () absolute write position.
+    path). x: (B,1,D); pos: () shared absolute write position, or (B,)
+    per-row positions (continuous batching: every cache slot carries its own
+    decode position — RoPE, the cache write and the attention mask are all
+    per-row). Rows must keep pos within [0, Smax): the scheduler freezes a
+    retired slot's pos at its last value (>= cushion length) so its dummy
+    writes keep landing on its own scratch position and never touch the
+    cushion block; its masked output is discarded.
 
     kv is either the fp cache {"k","v": (B,Smax,K,hd)} (cushion rows live
     in-cache at [0:m)) or the int8 cache
@@ -386,10 +392,11 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     B = x.shape[0]
     qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps)
     q, k, v = _split_qkv(qkv, cfg)
-    posv = jnp.asarray(pos)[None]       # (1,)
-    cos, sin = rope_cos_sin(posv, cfg.head_dim, cfg.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
+    per_row = jnp.ndim(pos) == 1
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    cos, sin = rope_cos_sin(posv[:, None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)         # cos/sin: (B, 1, hd/2)
+    k = apply_rope(k, cos, sin)
 
     quantized = "k_scale" in kv
     if quantized:
@@ -399,8 +406,15 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     else:
         k_wr = k.astype(kv["k"].dtype)
         v_wr = v.astype(kv["v"].dtype)
-    cache_k = jax.lax.dynamic_update_slice(kv["k"], k_wr, (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(kv["v"], v_wr, (0, pos, 0, 0))
+    if per_row:
+        # each row writes at its own position (vmapped update -> scatter)
+        row_wr = jax.vmap(
+            lambda c, u, p_: jax.lax.dynamic_update_slice(c, u, (p_, 0, 0)))
+        cache_k = row_wr(kv["k"], k_wr, posv)
+        cache_v = row_wr(kv["v"], v_wr, posv)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(kv["k"], k_wr, (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(kv["v"], v_wr, (0, pos, 0, 0))
     new = dict(kv)
     new["k"], new["v"] = cache_k, cache_v
 
@@ -408,20 +422,22 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     if _use_decode_kernel():
         from repro.kernels.ops import decode_attention_pallas
         out = decode_attention_pallas(
-            q1, cache_k, cache_v, pos,
+            q1, cache_k, cache_v, posv,
             k_scale=ks if quantized else None,
             v_scale=vs if quantized else None,
             kc=kv.get("kc"), vc=kv.get("vc"),
             interpret=jax.default_backend() != "tpu")
     elif quantized:
         from repro.kernels.ref import flash_decode_ref
-        out = flash_decode_ref(q1, cache_k, cache_v, pos, k_scale=ks,
+        out = flash_decode_ref(q1, cache_k, cache_v, posv, k_scale=ks,
                                v_scale=vs, kc=kv.get("kc"), vc=kv.get("vc"))
     else:
         Smax = cache_k.shape[1]
-        mask = jnp.broadcast_to((jnp.arange(Smax) <= pos)[None, :],
-                                (1, Smax))
-        out = _sdpa(q, cache_k, cache_v, mask, cfg)[:, 0]
+        mask = jnp.arange(Smax)[None, :] <= posv[:, None]   # (B, Smax)
+        out = _sdpa(q, cache_k, cache_v, mask[:, None, :], cfg)[:, 0]
+        # retired rows (pos < 0, nothing visible): zeros, matching the
+        # kernel and flash_decode_ref instead of softmax's uniform average
+        out = jnp.where((posv >= 0)[:, None, None], out, 0.0).astype(out.dtype)
     out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
     y = qlinear(out, p["wo"], None, qcfg, scales, "o", taps)
     return y, new

@@ -35,6 +35,11 @@ SITES = ("qkv", "o", "mamba_in", "mamba_out", "mlp_in", "down")
 # shapes grow with the prefix — one recompile per appended token).
 SUPPORTS_PREFIX_KV_SCORING = False
 
+# Continuous batching IS supported: attention leaves batch on axis 1, Mamba
+# state leaves on axis 2 (after period & sublayer axes); slot admission
+# scatters the whole per-request row (KV + recurrent state) at once.
+CACHE_BATCH_AXES = {"k": 1, "v": 1, "h": 2, "conv": 2}
+
 
 def layout(cfg: ModelConfig):
     h = cfg.hybrid
@@ -370,6 +375,10 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
 def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                 cfg: ModelConfig, qcfg: QuantConfig, *,
                 scales: Optional[Params] = None):
+    """One decode step; pos may be () shared or (B,) per-row. Attention
+    sublayers mask/write per-row (attention_decode_kv); Mamba recurrences
+    are position-free and advance every row — a retired slot's state takes
+    dummy-token updates and is rebuilt wholesale at recycle by prefill."""
     x = C.embed_tokens(params, token[:, None], cfg)
     n_periods, kinds = layout(cfg)
     nm = n_mamba_per_period(cfg)

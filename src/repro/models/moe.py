@@ -195,6 +195,7 @@ cushion_zeros = T.cushion_zeros
 write_cushion_to_cache = T.write_cushion_to_cache
 cache_roles = T.cache_roles
 placeholder_all_scales = T.placeholder_all_scales
+CACHE_BATCH_AXES = T.CACHE_BATCH_AXES
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
@@ -236,6 +237,9 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
 def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                 cfg: ModelConfig, qcfg: QuantConfig, *,
                 scales: Optional[Params] = None) -> Tuple[Array, Params]:
+    """One decode step; pos may be () shared or (B,) per-row (continuous
+    batching). Expert capacity/dispatch is per-row at S=1, so lock-step
+    decode of independent slots stays row-local."""
     x = C.embed_tokens(params, token[:, None], cfg)
     lscales = ({s: scales[s] for s in SITES} if scales is not None
                else C.placeholder_scales(SITES, cfg.n_layers))

@@ -83,8 +83,23 @@ class ModelAPI:
                                 qcfg, **_extra_kwargs(self.cfg, batch), **kw)
 
     def decode_step(self, params, token, pos, cache, qcfg: QuantConfig, **kw):
+        """pos: () shared absolute position, or (B,) per-row positions for
+        continuous batching (each cache slot decodes at its own offset)."""
         return self.mod.decode_step(params, token, pos, cache, self.cfg,
                                     qcfg, **kw)
+
+    @property
+    def cache_batch_axes(self) -> Dict[str, int]:
+        """Batch axis of every per-request cache leaf — the continuous-
+        batching scheduler's slot-scatter map. Families without it (ssm's
+        shape-polymorphic state, encdec's cross-attention frames) serve via
+        the static Engine only."""
+        axes = getattr(self.mod, "CACHE_BATCH_AXES", None)
+        if axes is None:
+            raise NotImplementedError(
+                f"{self.cfg.family}: no continuous-batching slot layout; "
+                "use serving.engine.Engine (static batch)")
+        return axes
 
     def cushion_zeros(self, m: int, dtype=jnp.float32):
         return self.mod.cushion_zeros(self.cfg, m, dtype=dtype)

@@ -34,6 +34,12 @@ SITES = C.ATTN_SITES + C.MLP_SITES  # ("qkv", "o", "mlp_in", "down")
 # against the cached block (ModelAPI.score_candidates).
 SUPPORTS_PREFIX_KV_SCORING = True
 
+# Continuous-batching slot layout: batch axis of every per-request cache
+# leaf (init_cache puts batch second, after the layer axis). The scheduler
+# scatters a B=1 prefilled cache row into its slot along these axes and
+# relies on decode_step accepting a (B,) per-row pos vector.
+CACHE_BATCH_AXES = {"k": 1, "v": 1}
+
 
 def layer_init(key, cfg: ModelConfig) -> Params:
     k1, k2 = jax.random.split(key)
@@ -263,8 +269,11 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
 def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                 cfg: ModelConfig, qcfg: QuantConfig, *,
                 scales: Optional[Params] = None) -> Tuple[Array, Params]:
-    """One decode step. token: (B,) int32; pos: () int32 absolute position
-    (cushion occupies [0:m), prompt/generated next)."""
+    """One decode step. token: (B,) int32; pos: () int32 shared absolute
+    position, or (B,) int32 per-row positions (cushion occupies [0:m),
+    prompt/generated next). Per-row pos serves the continuous-batching
+    scheduler: each cache slot decodes at its own offset, with RoPE, cache
+    writes and attention masking all per-row (see attention_decode_kv)."""
     x = C.embed_tokens(params, token[:, None], cfg)
     lscales = ({s: scales[s] for s in SITES} if scales is not None
                else C.placeholder_scales(SITES, cfg.n_layers))

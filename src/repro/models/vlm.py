@@ -29,6 +29,9 @@ cushion_zeros = T.cushion_zeros
 decode_step = T.decode_step
 cache_roles = T.cache_roles
 placeholder_all_scales = T.placeholder_all_scales
+# decode is a plain token LM (patches enter at prefill only), so VLM slots
+# batch-continuously exactly like dense ones
+CACHE_BATCH_AXES = T.CACHE_BATCH_AXES
 
 
 def forward(params: Params, tokens: Array, cfg: ModelConfig,

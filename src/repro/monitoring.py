@@ -1,4 +1,6 @@
-"""Compile-count instrumentation built on ``jax.monitoring`` events.
+"""Compile-count and serving-occupancy instrumentation.
+
+Compile counting is built on ``jax.monitoring`` events.
 
 XLA emits a ``/jax/core/compile/backend_compile_duration`` event per backend
 compilation. The absolute multiplier per ``jit`` cache miss is a jax-version
@@ -59,3 +61,28 @@ def count_compiles() -> Iterator[CompileCounter]:
         yield c
     finally:
         _active.remove(c)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Continuous-batching scheduler counters (serving/scheduler.py).
+
+    ``steps`` counts lock-step decode iterations over the slot pool;
+    ``live_slot_steps`` accumulates how many of the pool's slots held a live
+    request at each step, so ``occupancy()`` is the mean fraction of decode
+    compute spent on real tokens (1.0 = perfectly packed, low values =
+    the pool idles between arrivals). Retired/empty slots still run
+    (compute-masked, outputs discarded) — occupancy is the serve bench's
+    measure of that waste."""
+    n_slots: int = 0
+    steps: int = 0              # lock-step decode iterations
+    live_slot_steps: int = 0    # sum over steps of live slots that step
+    admitted: int = 0           # requests prefilled into a slot
+    finished: int = 0           # requests retired (EOS or budget)
+    recycles: int = 0           # admissions into a previously-used slot
+
+    def occupancy(self) -> float:
+        return self.live_slot_steps / max(1, self.steps * self.n_slots)
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "occupancy": self.occupancy()}

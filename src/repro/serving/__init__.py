@@ -1,1 +1,7 @@
-"""repro.serving"""
+"""repro.serving — static-batch Engine and the continuous-batching
+scheduler (ContinuousEngine: slot pool, per-row decode positions)."""
+from repro.serving.engine import Engine, GenerationResult, bucket_steps
+from repro.serving.scheduler import ContinuousEngine, Request, RequestOutput
+
+__all__ = ["Engine", "GenerationResult", "bucket_steps",
+           "ContinuousEngine", "Request", "RequestOutput"]

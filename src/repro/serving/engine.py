@@ -37,6 +37,22 @@ class GenerationResult:
     tpot_ms: float
 
 
+def cache_seq_len(max_seq: int) -> int:
+    """Round a KV-cache length up to a multiple of 128 so the decode
+    kernel's KV chunking divides it evenly (a ragged tail would cost a full
+    cache copy per decode step). Shared by the static Engine and the
+    continuous-batching pool — the invariant lives here."""
+    return -(-max_seq // 128) * 128
+
+
+def cushion_prefix_len(cushion) -> int:
+    """Length m of the cushion/sink prefix block in a cushion artifact
+    (0 when absent or stateless)."""
+    if cushion is not None and "kv" in cushion:
+        return int(cushion["kv"]["k"].shape[1])
+    return 0
+
+
 def bucket_steps(n_steps: int) -> int:
     """Round a decode-step budget up to the next power of two (min 8).
 
@@ -67,14 +83,9 @@ class Engine:
         self.qcfg = qcfg
         self.cushion = cushion
         self.scales = scales
-        # round the cache up to a multiple of 128 so the decode kernel's KV
-        # chunking divides it evenly (a ragged tail would cost a full cache
-        # copy per decode step)
-        self.max_seq = -(-max_seq // 128) * 128
+        self.max_seq = cache_seq_len(max_seq)
         self.kv_dtype = kv_dtype
-        self.prefix_len = 0
-        if cushion is not None and "kv" in cushion:
-            self.prefix_len = int(cushion["kv"]["k"].shape[1])
+        self.prefix_len = cushion_prefix_len(cushion)
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
                                         scales=scales))
@@ -136,7 +147,10 @@ class Engine:
         toks.block_until_ready()    # single host sync for the whole loop
         # tpot charges the (bucket-padded) loop to the *delivered* tokens —
         # honest latency per useful token, slightly pessimistic off-bucket.
-        tpot = (time.perf_counter() - t1) * 1e3 / max(1, n_tokens - 1)
+        # A <=1-token request has no "per subsequent token" latency: report
+        # 0.0 instead of the 0-step scan's dispatch overhead.
+        tpot = (0.0 if n_tokens <= 1
+                else (time.perf_counter() - t1) * 1e3 / (n_tokens - 1))
         return GenerationResult(tokens=np.asarray(toks).T, ttft_ms=ttft,
                                 tpot_ms=tpot)
 
@@ -158,6 +172,7 @@ class Engine:
             pos = pos + 1
             out.append(np.asarray(tok))
         jax.block_until_ready(tok)
-        tpot = (time.perf_counter() - t1) * 1e3 / max(1, n_tokens - 1)
+        tpot = (0.0 if n_tokens <= 1
+                else (time.perf_counter() - t1) * 1e3 / (n_tokens - 1))
         return GenerationResult(tokens=np.stack(out, 1), ttft_ms=ttft,
                                 tpot_ms=tpot)

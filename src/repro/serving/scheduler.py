@@ -1,0 +1,260 @@
+"""Continuous-batching serving scheduler: a fixed pool of cache slots that
+requests flow through independently (admit -> prefill -> lock-step decode ->
+retire -> recycle), instead of the static Engine's all-start-together batch.
+
+Design
+------
+* The pool is ONE device cache of ``n_slots`` rows plus three per-row
+  vectors: ``pos`` ((B,) int32 decode positions), ``tok`` ((B,) int32 last
+  sampled tokens) and a host-side ``live`` mask. Decode runs one jitted
+  step over the whole pool regardless of how many slots are live — dead
+  rows are *compute-masked* (their pos is frozen, their sampled token
+  forced to 0, their output discarded), never resized away, so the step
+  executable compiles exactly once.
+* Admission prefills the request alone (B=1, cushion attached) and
+  scatters the full prefilled cache row into its slot along the family's
+  ``CACHE_BATCH_AXES``. Scattering the *whole* row re-writes the cushion
+  block [0:m) bit-identically on every recycle (KVSink/IntactKV: the fp
+  sink block is never evicted and never inherited stale from the previous
+  occupant) and leaves any stale content KV beyond the new request's
+  extent masked off by the slot's own ``pos``.
+* Per-row positions are threaded down to the attention kernel: RoPE
+  offsets, cache writes and masking are all per-slot
+  (``common.attention_decode_kv`` / ``kernels/flash_decode.py``), so slots
+  prefilled at different times decode together in one lock-step batch.
+* EOS/budget retirement happens host-side on the one per-step sync that
+  reads the sampled tokens; the freed slot is recycled by the next
+  admission. TTFT/TPOT are tracked per request; pool occupancy lands in
+  ``monitoring.ServeStats``.
+
+Scope: greedy decoding over full-precision KV pools for families with a
+``CACHE_BATCH_AXES`` slot layout (dense / moe / vlm / hybrid). int8 KV
+pools are static-Engine-only for now — their per-(layer,head) dequant
+scales are calibrated from one batch's prompts, and a pool shared by
+requests admitted at different times would need per-slot scale storage.
+When every request starts together with one shared budget, prefer the
+static ``Engine``: its device-resident scan syncs twice per request
+instead of once per token.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.models.registry import ModelAPI
+from repro.monitoring import ServeStats
+from repro.serving.engine import cache_seq_len, cushion_prefix_len
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. batch: B=1 model inputs ({"tokens": (1, S)}
+    plus "patches"/"frames" where the family needs them). arrival_s is the
+    trace-relative arrival time (0.0 = available immediately)."""
+    uid: int
+    batch: Dict[str, Any]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    uid: int
+    tokens: np.ndarray          # (n_gen,) int32 — includes EOS if emitted
+    ttft_ms: float              # admission -> first token (prefill wall)
+    tpot_ms: float              # mean wall per subsequent token (0.0 if <2)
+    slot: int
+    admitted_s: float           # trace-relative admission completion
+    finished_s: float           # trace-relative retirement
+    latency_s: float            # arrival -> retirement
+
+
+class _Slot:
+    __slots__ = ("req", "tokens", "t_first", "t_admit", "used")
+
+    def __init__(self) -> None:
+        self.req: Optional[Request] = None
+        self.tokens: List[int] = []
+        self.t_first = 0.0
+        self.t_admit = 0.0
+        self.used = False       # has ever held a request (recycle counter)
+
+
+class ContinuousEngine:
+    """Continuous-batching counterpart of ``Engine`` (one compiled step
+    executable shared by every pool composition; see module docstring)."""
+
+    def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
+                 n_slots: int = 4, max_seq: int = 2048, cushion=None,
+                 scales=None, stats: Optional[ServeStats] = None):
+        self.api = api
+        self.params = params
+        self.qcfg = qcfg
+        self.n_slots = n_slots
+        self.max_seq = cache_seq_len(max_seq)
+        self.cushion = cushion
+        self.scales = scales
+        self.prefix_len = cushion_prefix_len(cushion)
+        self._axes = api.cache_batch_axes   # raises for unsupported families
+        self.stats = stats if stats is not None else ServeStats(n_slots=n_slots)
+        self.stats.n_slots = n_slots
+
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
+                                        scales=scales))
+
+        axes = self._axes
+
+        def admit(cache, row, slot, pos, tok, rpos, tok0):
+            cache = dict(cache)
+            for key, ax in axes.items():
+                cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[key], row[key].astype(cache[key].dtype), slot,
+                    axis=ax)
+            return (cache, pos.at[slot].set(jnp.asarray(rpos, jnp.int32)),
+                    tok.at[slot].set(jnp.asarray(tok0, jnp.int32)))
+
+        def step(p, tok, pos, live, cache):
+            logits, cache = api.decode_step(p, tok, pos, cache, qcfg,
+                                            scales=scales)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(live, nxt, 0)          # dead rows feed token 0
+            pos = jnp.where(live, pos + 1, pos)    # freeze retired offsets
+            return nxt, pos, cache
+
+        # donate the pool cache: the old buffer is dead once self.cache is
+        # rebound, and without donation every per-layer cache write would
+        # materialize a pool-sized copy per decode step (and 2x peak HBM).
+        # Backends that can't donate (CPU) just ignore the hint.
+        self._admit = jax.jit(admit, donate_argnums=(0,))
+        self._step = jax.jit(step, donate_argnums=(4,))
+        self._reset_pool()
+
+    # ------------------------------------------------------------------
+    # Pool state
+    # ------------------------------------------------------------------
+
+    def _reset_pool(self) -> None:
+        self.cache = self.api.init_cache(self.n_slots, self.max_seq)
+        self.pos = jnp.zeros((self.n_slots,), jnp.int32)
+        self.tok = jnp.zeros((self.n_slots,), jnp.int32)
+        self.live = np.zeros((self.n_slots,), bool)
+        self._slots = [_Slot() for _ in range(self.n_slots)]
+
+    def _positions_needed(self, req: Request) -> int:
+        S = req.batch["tokens"].shape[1]
+        if "patches" in req.batch:
+            S += req.batch["patches"].shape[1]
+        return self.prefix_len + S + req.max_new_tokens
+
+    # ------------------------------------------------------------------
+    # Admission / retirement
+    # ------------------------------------------------------------------
+
+    def _admit_request(self, req: Request, slot: int, t0: float) -> None:
+        need = self._positions_needed(req)
+        if need > self.max_seq:
+            raise ValueError(
+                f"request {req.uid} needs {need} positions "
+                f"(prefix {self.prefix_len} + prompt + budget) "
+                f"> pool max_seq {self.max_seq}")
+        tpf = time.perf_counter()
+        row = self.api.init_cache(1, self.max_seq)
+        logits, row, rpos = self._prefill(self.params, req.batch, row)
+        logits = logits[:, -1] if logits.ndim == 3 else logits
+        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        self.cache, self.pos, self.tok = self._admit(
+            self.cache, row, jnp.asarray(slot, jnp.int32), self.pos,
+            self.tok, rpos, tok0)
+        first = int(jax.block_until_ready(tok0))
+        now = time.perf_counter()
+
+        s = self._slots[slot]
+        if s.used:
+            self.stats.recycles += 1
+        s.used = True
+        s.req = req
+        s.tokens = [first]
+        s.t_admit = now - t0
+        s.t_first = now
+        self.stats.admitted += 1
+        ttft = (now - tpf) * 1e3
+        self._ttft[req.uid] = ttft
+        done = (req.max_new_tokens <= 1
+                or (req.eos_id is not None and first == req.eos_id))
+        self.live[slot] = not done
+        if done:
+            self._retire(slot, t0)
+
+    def _retire(self, slot: int, t0: float) -> None:
+        s = self._slots[slot]
+        req = s.req
+        assert req is not None
+        now = time.perf_counter()
+        n = len(s.tokens)
+        tpot = 0.0 if n <= 1 else (now - s.t_first) * 1e3 / (n - 1)
+        self._results[req.uid] = RequestOutput(
+            uid=req.uid, tokens=np.asarray(s.tokens, np.int32),
+            ttft_ms=self._ttft[req.uid], tpot_ms=tpot, slot=slot,
+            admitted_s=s.t_admit, finished_s=now - t0,
+            latency_s=(now - t0) - req.arrival_s)
+        self.live[slot] = False
+        s.req = None
+        self.stats.finished += 1
+
+    # ------------------------------------------------------------------
+    # Trace replay
+    # ------------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> List[RequestOutput]:
+        """Replay a trace: admit each request once its arrival time passes
+        and a slot is free (FIFO), decode the pool in lock-step, return
+        outputs sorted by uid. Re-entrant: the pool and the occupancy
+        stats are reset per run (compiled executables are kept)."""
+        self._reset_pool()
+        self.stats.__init__(n_slots=self.n_slots)
+        self._results: Dict[int, RequestOutput] = {}
+        self._ttft: Dict[int, float] = {}
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        t0 = time.perf_counter()
+
+        while queue or self.live.any():
+            now = time.perf_counter() - t0
+            # admit every arrived request that fits a free slot
+            while queue and queue[0].arrival_s <= now:
+                free = np.flatnonzero(~self.live)
+                free = [i for i in free if self._slots[i].req is None]
+                if not free:
+                    break
+                self._admit_request(queue.popleft(), int(free[0]), t0)
+            if not self.live.any():
+                if queue:       # pool idle, next arrival in the future
+                    time.sleep(min(1e-3, max(0.0,
+                               queue[0].arrival_s - (time.perf_counter() - t0))))
+                continue
+
+            self.tok, self.pos, self.cache = self._step(
+                self.params, self.tok, self.pos, jnp.asarray(self.live),
+                self.cache)
+            toks = np.asarray(self.tok)     # the one host sync per step
+            self.stats.steps += 1
+            self.stats.live_slot_steps += int(self.live.sum())
+            for slot in np.flatnonzero(self.live):
+                s = self._slots[slot]
+                req = s.req
+                s.tokens.append(int(toks[slot]))
+                if (len(s.tokens) >= req.max_new_tokens
+                        or (req.eos_id is not None
+                            and s.tokens[-1] == req.eos_id)):
+                    self._retire(int(slot), t0)
+
+        return [self._results[u] for u in sorted(self._results)]

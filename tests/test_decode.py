@@ -176,3 +176,39 @@ def test_token_budget_bucketing(rng):
     assert second.tokens.shape == (2, 9)
     looped = eng.generate_py(batch, 9)
     np.testing.assert_array_equal(second.tokens, looped.tokens)
+
+
+def test_bucket_surplus_steps_near_max_seq(rng):
+    """Regression for the bucket_steps surplus-step claim: a request whose
+    bucket-padded scan runs past ``max_seq`` (surplus cache writes clamp
+    into the last row) still delivers uncorrupted tokens — the clamped
+    writes only ever touch positions read by the discarded surplus steps."""
+    from repro.serving.engine import bucket_steps
+
+    cfg = reduced(get_config("smollm-360m"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 115)
+    n_tokens = 10                               # 9 steps -> 16-step bucket
+    eng = Engine(api, params, QN, max_seq=128)  # prompt 115 + 16 > 128
+    assert eng.max_seq == 128
+    assert 115 + bucket_steps(n_tokens - 1) > eng.max_seq   # surplus clamps
+    scanned = eng.generate(batch, n_tokens)
+    looped = eng.generate_py(batch, n_tokens)   # exact-step reference
+    np.testing.assert_array_equal(scanned.tokens, looped.tokens)
+    assert scanned.tokens.shape == (2, n_tokens)
+
+
+def test_tpot_zero_for_single_token(rng):
+    """TPOT is latency per *subsequent* token: n_tokens <= 1 has none, so
+    both generation paths report 0.0 instead of dividing loop overhead by
+    a clamped denominator."""
+    cfg = reduced(get_config("smollm-360m"), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(rng)
+    batch = api.make_batch(rng, 2, 8)
+    eng = Engine(api, params, QN, max_seq=32)
+    for res in (eng.generate(batch, 1), eng.generate_py(batch, 1)):
+        assert res.tpot_ms == 0.0
+        assert res.tokens.shape == (2, 1)
+        assert res.ttft_ms > 0.0

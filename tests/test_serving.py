@@ -1,0 +1,224 @@
+"""Continuous-batching serving contract:
+
+* Hypothesis property test for per-row ``pos`` masking in the split-KV
+  decode kernel — ragged position vectors (rows at the cushion boundary,
+  fully retired rows) match ``flash_decode_ref`` in fp and int8+cushion
+  modes, and an all-equal vector reproduces the scalar-pos result exactly;
+* per-row pos threading through every family's ``decode_step`` (dense /
+  moe / vlm / hybrid): a pool of slots prefilled to different depths
+  decodes in one lock-step batch to the same logits as each slot alone;
+* the cross-path parity oracle: greedy outputs from ``ContinuousEngine``
+  are token-for-token identical to ``Engine.generate`` run per-request,
+  including requests admitted mid-flight into a recycled slot, with the
+  cushion block bit-identical after recycling (no stale-KV leakage);
+* EOS retirement, slot-budget validation, and the documented
+  static-Engine-only fallback for families without a slot layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import QuantConfig, get_config, reduced
+from repro.kernels import ref as R
+from repro.kernels.flash_decode import flash_decode
+from repro.models.registry import build
+from repro.serving import ContinuousEngine, Engine, Request
+
+try:                    # only the property test needs hypothesis; the
+    import hypothesis   # scheduler/parity contract must run without it
+    import hypothesis.strategies as st
+except ImportError:     # pragma: no cover
+    hypothesis = st = None
+
+QN = QuantConfig(mode="none")
+
+# ---------------------------------------------------------------------------
+# Per-row pos masking property (kernel level)
+# ---------------------------------------------------------------------------
+
+_B, _K, _G, _HD, _SMAX, _M = 4, 2, 2, 16, 64, 8
+_RS = np.random.RandomState(7)
+_Q = jnp.asarray(_RS.randn(_B, _K * _G, _HD).astype(np.float32))
+_KF = jnp.asarray(_RS.randn(_B, _SMAX, _K, _HD).astype(np.float32))
+_VF = jnp.asarray(_RS.randn(_B, _SMAX, _K, _HD).astype(np.float32))
+_KQ = jnp.asarray(_RS.randint(-127, 128, (_B, _SMAX, _K, _HD)), jnp.int8)
+_VQ = jnp.asarray(_RS.randint(-127, 128, (_B, _SMAX, _K, _HD)), jnp.int8)
+_KS = jnp.asarray(_RS.rand(_K).astype(np.float32) * 0.05 + 0.01)
+_VS = jnp.asarray(_RS.rand(_K).astype(np.float32) * 0.05 + 0.01)
+_KC = jnp.asarray(_RS.randn(_M, _K, _HD).astype(np.float32))
+_VC = jnp.asarray(_RS.randn(_M, _K, _HD).astype(np.float32))
+
+
+def _check_per_row_pos(pos, quantized):
+    posv = jnp.asarray(pos, jnp.int32)
+    if quantized:
+        out = flash_decode(_Q, _KQ, _VQ, posv, k_scale=_KS, v_scale=_VS,
+                           kc=_KC, vc=_VC, bkv=32, interpret=True)
+        ref = R.flash_decode_ref(_Q, _KQ, _VQ, posv, k_scale=_KS,
+                                 v_scale=_VS, kc=_KC, vc=_VC)
+    else:
+        out = flash_decode(_Q, _KF, _VF, posv, bkv=32, interpret=True)
+        ref = R.flash_decode_ref(_Q, _KF, _VF, posv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["fp", "int8"])
+@pytest.mark.parametrize("pos", [
+    [_M, -1, _SMAX - 1, _M - 1],    # cushion boundary, retired, full, m-1
+    [-1, -1, -1, 5],                # mostly-retired pool
+    [0, 17, 31, 32],                # chunk-edge straddle (bkv=32)
+    [3, 60, -1, 33],                # ragged mid-decode pool
+])
+def test_per_row_pos_masking_cases(pos, quantized):
+    """Deterministic per-row pos masking cases (always run, even without
+    hypothesis): ragged (B,) position vectors — rows at the cushion
+    boundary (pos == m) and fully retired rows (pos == -1) — produce the
+    oracle's output row-for-row, fp and int8+cushion."""
+    _check_per_row_pos(pos, quantized)
+
+
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=15, deadline=None)
+    @hypothesis.example(pos=[_M, -1, _SMAX - 1, _M - 1], quantized=True)
+    @hypothesis.example(pos=[-1, -1, -1, 5], quantized=False)
+    @hypothesis.example(pos=[0, 17, 31, 32], quantized=False)
+    @hypothesis.given(
+        pos=st.lists(st.integers(-1, _SMAX - 1), min_size=_B, max_size=_B),
+        quantized=st.booleans())
+    def test_per_row_pos_masking_property(pos, quantized):
+        """Hypothesis-driven version of the masking cases above."""
+        _check_per_row_pos(pos, quantized)
+
+
+def test_uniform_pos_vector_equals_scalar():
+    """A (B,) vector with every row equal is bit-identical to the scalar
+    path (the static Engine keeps scalar pos; parity must be free)."""
+    vec = flash_decode(_Q, _KF, _VF, jnp.full((_B,), 41, jnp.int32),
+                       bkv=32, interpret=True)
+    sca = flash_decode(_Q, _KF, _VF, 41, bkv=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(vec), np.asarray(sca))
+
+
+# ---------------------------------------------------------------------------
+# Per-row pos through every family's decode_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "olmoe-1b-7b",
+                                  "internvl2-26b", "jamba-v0.1-52b"])
+def test_decode_step_per_row_pos_matches_single_slot(arch):
+    """Two slots prefilled to different depths, decoded as one lock-step
+    batch with a (B,) pos vector, match each slot decoded alone (B=1,
+    scalar pos) — dense, moe, vlm and hybrid (attention KV + Mamba state
+    scattered along the family's CACHE_BATCH_AXES)."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    axes = api.cache_batch_axes
+    max_seq = 64
+    rows, poss, toks, ref_logits = [], [], [], []
+    for i, L in enumerate((20, 26)):    # make_batch takes total positions
+        b = api.make_batch(jax.random.PRNGKey(10 + i), 1, L)
+        c = api.init_cache(1, max_seq)
+        lg, c, p = api.prefill(params, b, c, QN)
+        t = jnp.argmax(lg[:, -1] if lg.ndim == 3 else lg,
+                       axis=-1).astype(jnp.int32)
+        lr, c1 = api.decode_step(params, t, p, c, QN)   # B=1, scalar pos
+        rows.append(c)
+        poss.append(p)
+        toks.append(t[0])
+        ref_logits.append(np.asarray(lr[0]))
+    pool = {key: jnp.concatenate([r[key] for r in rows], axis=ax)
+            for key, ax in axes.items()}
+    lg2, _ = api.decode_step(params, jnp.stack(toks),
+                             jnp.stack(poss).astype(jnp.int32), pool, QN)
+    for i in range(2):
+        np.testing.assert_allclose(np.asarray(lg2[i]), ref_logits[i],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Cross-path parity oracle: ContinuousEngine vs per-request Engine.generate
+# ---------------------------------------------------------------------------
+
+def _family_setup(arch):
+    cfg = (get_config(arch) if arch == "paper_tiny"
+           else reduced(get_config(arch), dtype="float32"))
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2, 3], jnp.int32),
+                                  None, QN)
+    return api, params, cushion
+
+
+@pytest.mark.parametrize("arch", ["paper_tiny", "olmoe-1b-7b",
+                                  "internvl2-26b"])
+def test_continuous_scheduler_matches_engine(arch):
+    """Greedy outputs of the continuous scheduler are token-for-token
+    identical to the static Engine run per-request — across requests of
+    different prompt lengths and budgets, admitted mid-flight into
+    recycled slots, with the cushion prefix block bit-identical after
+    recycling."""
+    api, params, cushion = _family_setup(arch)
+    budgets = [5, 3, 6, 4, 5]
+    lens = [20, 26]                     # total positions, two prompt shapes
+    reqs = [Request(uid=i, batch=api.make_batch(jax.random.PRNGKey(100 + i),
+                                                1, lens[i % 2]),
+                    max_new_tokens=n)
+            for i, n in enumerate(budgets)]
+    ce = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                          cushion=cushion)
+    outs = ce.run(reqs)
+    assert ce.stats.admitted == len(reqs)
+    assert ce.stats.finished == len(reqs)
+    assert ce.stats.recycles >= 1, "trace must exercise slot recycling"
+
+    eng = Engine(api, params, QN, cushion=cushion, max_seq=128)
+    for req, out in zip(reqs, outs):
+        ref = eng.generate(req.batch, req.max_new_tokens).tokens[0]
+        np.testing.assert_array_equal(out.tokens, ref)
+        assert out.tokens.shape == (req.max_new_tokens,)
+
+    # cushion never evicted, bit-identical in every (recycled) slot
+    m = ce.prefix_len
+    want = np.asarray(cushion["kv"]["k"]).astype(ce.cache["k"].dtype)
+    for s in range(ce.n_slots):
+        np.testing.assert_array_equal(np.asarray(ce.cache["k"][:, s, :m]),
+                                      want)
+
+
+def test_eos_retires_request_early():
+    """A request whose eos_id appears mid-stream retires at the EOS token
+    (included in the output) and frees its slot for the queue."""
+    api, params, cushion = _family_setup("paper_tiny")
+    batch = api.make_batch(jax.random.PRNGKey(5), 1, 12)
+    ce = ContinuousEngine(api, params, QN, n_slots=1, max_seq=128,
+                          cushion=cushion)
+    free = ce.run([Request(uid=0, batch=batch, max_new_tokens=8)])[0]
+    # pick an eos whose FIRST occurrence is mid-stream (tiny random models
+    # often repeat the very first token)
+    j = next((i for i in range(1, len(free.tokens))
+              if free.tokens[i] not in free.tokens[:i]), None)
+    if j is None:
+        pytest.skip("degenerate sample: every generated token identical")
+    eos = int(free.tokens[j])
+    outs = ce.run([Request(uid=0, batch=batch, max_new_tokens=8, eos_id=eos),
+                   Request(uid=1, batch=batch, max_new_tokens=3)])
+    np.testing.assert_array_equal(outs[0].tokens, free.tokens[:j + 1])
+    assert outs[1].tokens.shape == (3,)
+    assert ce.stats.recycles >= 1
+
+
+def test_budget_validation_and_unsupported_family():
+    api, params, cushion = _family_setup("paper_tiny")
+    ce = ContinuousEngine(api, params, QN, n_slots=1, max_seq=128,
+                          cushion=cushion)
+    big = Request(uid=0, batch=api.make_batch(jax.random.PRNGKey(0), 1, 100),
+                  max_new_tokens=100)
+    with pytest.raises(ValueError, match="max_seq"):
+        ce.run([big])
+
+    ssm = build(reduced(get_config("xlstm-350m"), dtype="float32"))
+    with pytest.raises(NotImplementedError, match="continuous"):
+        ContinuousEngine(ssm, None, QN, n_slots=1, max_seq=128)
