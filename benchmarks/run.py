@@ -169,7 +169,7 @@ def search_bench():
             f"{runs['fast']['prefix']} vs {runs['ref']['prefix']}")
 
 
-def serve_bench():
+def serve_bench(tp: int = 1):
     """Continuous-batching serve bench: replay one Poisson-arrival trace
     through the slot-pool scheduler (``ContinuousEngine``) and through
     sequential per-request ``Engine.generate``, on paper_tiny with a
@@ -177,7 +177,13 @@ def serve_bench():
     identical request-for-request) and that continuous batching delivers
     higher aggregate tokens/s; emits CSV rows and the
     ``results/BENCH_serve.json`` trajectory artifact (tokens/s, p50/p99
-    request latency, slot occupancy from ``monitoring.ServeStats``)."""
+    request latency, slot occupancy from ``monitoring.ServeStats``).
+
+    ``tp > 1`` (``--tp``) reruns the whole bench on a (data=1, tp) mesh —
+    params under the serve rules, KV pool sharded on its heads axis — and
+    additionally asserts the sharded static Engine generates token-for-token
+    what the unsharded one does; the point then lands in
+    ``results/BENCH_tp.json`` so the tp trajectory regresses separately."""
     import json
     import os
 
@@ -191,6 +197,11 @@ def serve_bench():
     from repro.serving.engine import Engine
     from repro.serving.scheduler import ContinuousEngine
 
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(tp)
+
     cfg = get_config("paper_tiny")
     api = build(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
@@ -203,8 +214,19 @@ def serve_bench():
     reqs = poisson_trace(api, 0, n_requests, rate, prompt_lens, budgets)
 
     ce = ContinuousEngine(api, params, qcfg, n_slots=n_slots,
-                          max_seq=max_seq, cushion=cushion)
-    eng = Engine(api, params, qcfg, cushion=cushion, max_seq=max_seq)
+                          max_seq=max_seq, cushion=cushion, mesh=mesh)
+    eng = Engine(api, params, qcfg, cushion=cushion, max_seq=max_seq,
+                 mesh=mesh)
+
+    if mesh is not None:
+        # tp parity gate: the sharded engine must reproduce the unsharded
+        # engine token-for-token before any throughput number is recorded
+        eng1 = Engine(api, params, qcfg, cushion=cushion, max_seq=max_seq)
+        r = reqs[0]
+        if not np.array_equal(eng.generate(r.batch, r.max_new_tokens).tokens,
+                              eng1.generate(r.batch, r.max_new_tokens).tokens):
+            raise SystemExit(f"tp={tp} generation diverged from tp=1")
+        del eng1
 
     first_arrival = min(r.arrival_s for r in reqs)
 
@@ -246,7 +268,7 @@ def serve_bench():
          "per-request Engine.generate")
     emit("serve_speedup", tps_c / tps_s * 1e6, f"parity_match={match}")
 
-    point = {"model": cfg.name, "n_slots": n_slots,
+    point = {"model": cfg.name, "tp": tp, "n_slots": n_slots,
              "n_requests": n_requests, "rate_req_s": rate,
              "prompt_lens": list(prompt_lens), "budgets": list(budgets),
              "total_tokens": total,
@@ -260,8 +282,10 @@ def serve_bench():
              "parity_match": match, **ce.stats.as_dict()}
     out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "BENCH_serve.json"), "w") as f:
-        json.dump({"bench": "serve", "points": [point]}, f, indent=1)
+    fname, bname = (("BENCH_tp.json", "serve_tp") if tp > 1
+                    else ("BENCH_serve.json", "serve"))
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump({"bench": bname, "points": [point]}, f, indent=1)
     if not match:
         raise SystemExit("continuous scheduler diverged from per-request "
                          "Engine.generate (parity oracle failed)")
@@ -283,11 +307,20 @@ def main() -> None:
                     help="run a single bench/table function by name")
     ap.add_argument("--skip-paper", action="store_true",
                     help="kernel microbenches only (fast)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="serve_bench only: tensor-parallel width (forces "
+                         "that many XLA host devices on CPU; emits "
+                         "results/BENCH_tp.json instead of BENCH_serve.json)")
     args = ap.parse_args()
+
+    # must land before the lazy `import jax` inside the bench fns
+    from repro.flags import force_host_device_count
+    force_host_device_count(args.tp)
 
     print("name,us_per_call,derived")
     if args.only in EXTRA_BENCHES:
-        EXTRA_BENCHES[args.only]()
+        kw = {"tp": args.tp} if args.only == "serve_bench" else {}
+        EXTRA_BENCHES[args.only](**kw)
         return
     kernel_microbench()
     if args.skip_paper:

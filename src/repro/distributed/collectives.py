@@ -17,16 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions: the top-level alias (with its
-    `check_vma` kwarg) appeared after 0.4.x; older releases expose
-    jax.experimental.shard_map with `check_rep` instead."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+from repro.distributed.sharding import shard_map_compat  # noqa: F401  (canonical home; re-exported for existing callers)
 
 
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:

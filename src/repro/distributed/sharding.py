@@ -46,8 +46,23 @@ def active_mesh() -> Optional[Mesh]:
     return _ACTIVE_MESH.get()
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: the top-level alias (with its
+    `check_vma` kwarg) appeared after 0.4.x; older releases expose
+    jax.experimental.shard_map with `check_rep` instead."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def _resolve_role(role, mesh: Mesh):
-    """Map an axis role to concrete mesh axis name(s)."""
+    """Map an axis role to concrete mesh axis name(s). Training meshes name
+    the tensor-parallel axis ``model``; serving meshes (launch/mesh.py
+    ``make_tp_mesh``) name it ``tp`` — the same "M" role resolves to either,
+    so one set of rules serves both worlds."""
     names = mesh.axis_names
     if role is None:
         return None
@@ -56,7 +71,7 @@ def _resolve_role(role, mesh: Mesh):
     if role == "D":                      # fsdp: data axis only
         return "data"
     if role == "M":                      # tensor parallel
-        return "model"
+        return "tp" if "tp" in names else "model"
     return role
 
 
@@ -69,14 +84,16 @@ def to_pspec(roles: Sequence[Any], mesh: Mesh) -> P:
 
 
 def constrain(x: jax.Array, *roles) -> jax.Array:
-    """Sharding hint; no-op when no mesh is active (CPU tests)."""
+    """Sharding hint; no-op when no mesh is active (CPU tests). Axes that
+    don't divide their mesh extent are dropped to replicated (same
+    ``roles_pspec`` rule as the cache layout) — otherwise a hint on e.g. a
+    2-kv-head cache at tp=4 would force GSPMD pad-shard/reshard cycles
+    against the replicated pool every decode step."""
     mesh = _ACTIVE_MESH.get()
     if mesh is None or mesh.size == 1:
         return x
-    if len(roles) < x.ndim:
-        roles = tuple(roles) + (None,) * (x.ndim - len(roles))
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, to_pspec(roles, mesh)))
+        x, NamedSharding(mesh, roles_pspec(roles, x.shape, mesh)))
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +140,21 @@ def serve_rules() -> Tuple[Tuple[str, Tuple[Any, ...]], ...]:
                  for rx, roles in DEFAULT_RULES)
 
 
+def _drop_indivisible(full: Sequence[Any], shape: Tuple[int, ...],
+                      mesh: Mesh) -> P:
+    """Drop shardings that don't divide (GSPMD would pad; for params and
+    cache leaves we prefer exact or replicated on that dim)."""
+    fixed = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = np.prod([mesh.shape[a] for a in
+                        (ax if isinstance(ax, tuple) else (ax,))])
+        fixed.append(ax if dim % int(size) == 0 else None)
+    return P(*fixed)
+
+
 def rules_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
                 rules=DEFAULT_RULES) -> P:
     # int8-resident (prequantized) weights keep the parent weight's rules
@@ -131,18 +163,31 @@ def rules_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
         if re.search(rx, path):
             pads = (None,) * (len(shape) - len(roles))
             full = pads + tuple(_resolve_role(r, mesh) for r in roles)
-            # drop shardings that don't divide (GSPMD would pad params; for
-            # params we prefer exact or replicated on that dim)
-            fixed = []
-            for dim, ax in zip(shape, full):
-                if ax is None:
-                    fixed.append(None)
-                    continue
-                size = np.prod([mesh.shape[a] for a in
-                                (ax if isinstance(ax, tuple) else (ax,))])
-                fixed.append(ax if dim % int(size) == 0 else None)
-            return P(*fixed)
+            return _drop_indivisible(full, shape, mesh)
     return P()
+
+
+def roles_pspec(roles: Sequence[Any], shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Resolve a role template aligned to the *leading* dims of `shape`
+    (cache-leaf convention; trailing dims replicated), dropping axes that
+    don't divide — e.g. a KV-heads axis narrower than the tp width falls
+    back to replicated instead of GSPMD padding."""
+    full = tuple(_resolve_role(r, mesh) for r in roles)
+    full = full + (None,) * (len(shape) - len(full))
+    return _drop_indivisible(full, shape, mesh)
+
+
+def cache_shardings(roles: Any, cache: Any, mesh: Mesh) -> Any:
+    """NamedShardings for a serving-cache pytree from a family's
+    ``cache_roles`` template (models/*.cache_roles: leaf name -> role
+    tuple; xlstm nests its state dicts). Leaves without a template entry
+    are replicated (tiny scales / cushion blocks / untemplated families)."""
+    if isinstance(cache, dict):
+        rd = roles if isinstance(roles, dict) else {}
+        return {key: cache_shardings(rd.get(key, ()), leaf, mesh)
+                for key, leaf in cache.items()}
+    rt = roles if isinstance(roles, (tuple, list)) else ()
+    return NamedSharding(mesh, roles_pspec(rt, cache.shape, mesh))
 
 
 def tree_paths(tree: Any) -> Any:

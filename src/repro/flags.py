@@ -7,8 +7,22 @@ import os
 # chunkwise mLSTM chunk length; 0 disables chunking (quadratic parallel form)
 MLSTM_CHUNK = int(os.environ.get("REPRO_MLSTM_CHUNK", "256"))
 
-# decode attention: keep KV-sequence axis sharded (split-KV / flash-decoding)
-DECODE_SPLIT_KV = os.environ.get("REPRO_SPLIT_KV", "1") != "0"
+def force_host_device_count(n: int) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS so a
+    CPU host emulates an n-device mesh (serving --tp / the sharding tests).
+    Must run before jax initializes — a no-op once jax is imported, when a
+    count is already forced, or for n <= 1. Real accelerator backends
+    ignore the flag. (This module is jax-free precisely so launchers can
+    call this before their first jax import.)"""
+    import sys
+    if n <= 1 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
 
 # decode attention kernel routing: "auto" = Pallas split-KV flash-decode on
 # TPU backends, jnp oracle elsewhere; "pallas" / "jnp" force either path

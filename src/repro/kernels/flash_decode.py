@@ -40,6 +40,16 @@ distribution degrades. It is read from a separate full-precision ref
 folded into the online softmax as the first block; the int8 cache holds
 content positions only, and positions below the cushion length are masked
 out of the int8 read.
+
+Tensor parallelism
+------------------
+The kernel is head-parallel by construction (the grid never mixes kv
+heads), so a tp mesh shards it by slicing heads per device —
+``kernels/ops.py:decode_attention_tp`` shard_maps this entry over the
+``tp`` axis with q/KV/scales sliced along their heads axes and the
+replicated fp cushion block sliced to local heads on entry (the stored
+block stays whole on every shard; see models/*.cache_roles). Requires
+K % tp == 0; model code falls back to the unsharded entry otherwise.
 """
 from __future__ import annotations
 

@@ -91,3 +91,55 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     (B,H,hd)."""
     return flash_decode(q, k, v, pos, k_scale=k_scale, v_scale=v_scale,
                         kc=kc, vc=vc, interpret=interpret)
+
+
+def decode_attention_tp(q: jax.Array, k: jax.Array, v: jax.Array, pos,
+                        mesh, axis: str = "tp",
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
+                        kc: jax.Array | None = None,
+                        vc: jax.Array | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Tensor-parallel split-KV decode: ``shard_map`` the flash-decode
+    kernel over the mesh's ``axis`` with per-shard head slicing.
+
+    Sharding contract (requires K % tp == 0; callers fall back to the
+    unsharded entry otherwise):
+      q        (B, H, hd)      heads axis sharded — H = K*G splits on KV-head
+                               boundaries, so each shard's G-groups stay
+                               aligned with its local KV heads
+      k/v      (B, Smax, K, hd) KV-heads axis sharded (the serve-pool layout
+                               from models/*.cache_roles)
+      k/v_scale (K,)           sharded with the heads they dequantize
+      kc/vc    (m, K, hd)      stored replicated (cushion bit-identity per
+                               shard); sliced to the local heads on entry
+      pos      () or (B,)      replicated
+
+    Each shard runs the whole split-KV kernel on its local heads — per-head
+    attention is embarrassingly parallel, so the body needs no collectives;
+    the surrounding o-projection (wo sharded ("M", None)) contributes the
+    one psum per layer. Returns q-sharded (B, H, hd)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    quantized = k_scale is not None
+    pos_spec = P() if jnp.ndim(pos) == 0 else P(None)
+    hs = P(None, axis, None)             # (B, H, hd) heads-sharded
+    kvs = P(None, None, axis, None)      # (B, Smax, K, hd) kv-heads-sharded
+    if quantized:
+        def body(q, k, v, pos, ksc, vsc, kc, vc):
+            return flash_decode(q, k, v, pos, k_scale=ksc, v_scale=vsc,
+                                kc=kc, vc=vc, interpret=interpret)
+        f = shard_map_compat(
+            body, mesh,
+            in_specs=(hs, kvs, kvs, pos_spec, P(axis), P(axis),
+                      P(None, axis, None), P(None, axis, None)),
+            out_specs=hs)
+        return f(q, k, v, pos, k_scale, v_scale, kc, vc)
+
+    def body(q, k, v, pos):
+        return flash_decode(q, k, v, pos, interpret=interpret)
+    f = shard_map_compat(body, mesh, in_specs=(hs, kvs, kvs, pos_spec),
+                         out_specs=hs)
+    return f(q, k, v, pos)

@@ -36,29 +36,9 @@ HBM_BW = 819e9
 ICI_BW_PER_LINK = 50e9
 
 
-def tuple_leaf(x):
-    return isinstance(x, tuple)
-
-
 def cache_shardings(api, cache_abstract, mesh):
-    roles = api.mod.cache_roles(api.cfg)
-
-    def one(role_t, leaf):
-        spec = SH.rules_pspec("", leaf.shape, mesh, rules=())
-        # resolve roles; drop axes that don't divide the dim
-        resolved = []
-        for dim, r in zip(leaf.shape, role_t):
-            ax = SH._resolve_role(r, mesh)
-            if ax is None:
-                resolved.append(None)
-                continue
-            size = int(np.prod([mesh.shape[a] for a in
-                                (ax if isinstance(ax, tuple) else (ax,))]))
-            resolved.append(ax if dim % size == 0 else None)
-        return NamedSharding(mesh, P(*resolved))
-
-    return jax.tree_util.tree_map(one, roles, cache_abstract,
-                                  is_leaf=tuple_leaf)
+    # shared role resolution (divisibility-dropping) with the serving path
+    return SH.cache_shardings(api.cache_roles(), cache_abstract, mesh)
 
 
 def batch_shardings(mesh, specs):

@@ -34,3 +34,21 @@ def make_mesh(shape, axes) -> Mesh:
 
 def single_device_mesh() -> Mesh:
     return Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+
+
+def make_tp_mesh(tp: int, data: int = 1) -> Mesh:
+    """Serving mesh: ``(data, tp)``. The ``tp`` axis name activates serving
+    tensor parallelism in the role resolver (distributed/sharding.py): "M"
+    roles — attention heads, d_ff, experts, vocab, the KV-pool heads axis —
+    shard over ``tp``; ``data`` is pure batch replication. ``tp=1`` yields a
+    trivial mesh (useful for exercising the sharded code path on one
+    device)."""
+    n = data * tp
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for a (data={data}, tp={tp}) mesh; have "
+            f"{len(devices)}. On CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before importing "
+            "jax to emulate a multi-device host.")
+    return Mesh(np.asarray(devices[:n]).reshape(data, tp), ("data", "tp"))

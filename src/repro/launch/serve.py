@@ -21,6 +21,26 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
+
+
+def _force_host_devices_for_tp() -> None:
+    """--tp N on CPU needs N XLA host devices, and the flag only takes
+    effect before jax initializes — sniff argv at import time (same pattern
+    as launch/dryrun.py)."""
+    from repro.flags import force_host_device_count
+    try:
+        if "--tp" in sys.argv:
+            tp = int(sys.argv[sys.argv.index("--tp") + 1])
+        else:       # argparse also accepts the --tp=N form
+            tp = next(int(a.split("=", 1)[1]) for a in sys.argv
+                      if a.startswith("--tp="))
+    except (IndexError, ValueError, StopIteration):
+        return
+    force_host_device_count(tp)
+
+
+_force_host_devices_for_tp()
 
 import jax
 import jax.numpy as jnp
@@ -53,12 +73,13 @@ def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
     return reqs
 
 
-def run_continuous(api, params, qcfg, args, bench_path=None):
+def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None):
     reqs = poisson_trace(api, args.seed, args.n_requests, args.rate,
                          prompt_lens=(args.prompt_len, args.prompt_len + 8),
                          budgets=(args.tokens, max(1, args.tokens // 2)))
     eng = ContinuousEngine(api, params, qcfg, n_slots=args.slots,
-                           max_seq=args.prompt_len + 8 + args.tokens + 32)
+                           max_seq=args.prompt_len + 8 + args.tokens + 32,
+                           mesh=mesh)
     if bench_path:
         eng.run(reqs)           # warm/compile pass; measure steady state
     outs = eng.run(reqs)
@@ -123,6 +144,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from latest checkpoint")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: shard params (serve rules) "
+                         "and the KV pool heads axis over a (data=1, tp=N) "
+                         "mesh; works on CPU via forced host devices (set "
+                         "automatically at import) and on real accelerator "
+                         "meshes alike")
     ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
                     help="KV-cache storage precision (int8 halves decode "
                          "HBM traffic; cushion prefix stays fp; static "
@@ -148,12 +175,18 @@ def main(argv=None):
             print(f"[serve] restored step {step}")
 
     qcfg = QuantConfig(mode=args.quant)
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(args.tp)
+        print(f"[serve] tp={args.tp} mesh over "
+              f"{[str(d) for d in mesh.devices.flat]}")
     if args.mode == "continuous":
         if args.kv_dtype != "fp":
             ap.error("--mode continuous serves fp KV pools only "
                      "(per-slot int8 scale calibration is future work)")
         return run_continuous(api, params, qcfg, args,
-                              bench_path=args.bench_json)
+                              bench_path=args.bench_json, mesh=mesh)
 
     corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
     pipe = Pipeline(corpus, batch=args.batch, seq_len=args.prompt_len,
@@ -162,19 +195,20 @@ def main(argv=None):
 
     eng = Engine(api, params, qcfg,
                  max_seq=args.prompt_len + args.tokens + 32,
-                 kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype)
+                 kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
+                 mesh=mesh)
     if args.bench_json:
         eng.generate(batch, args.tokens)     # warm/compile: the recorded
         # point must measure steady-state decode, not scan-loop tracing
     res = eng.generate(batch, args.tokens)
     print(f"[serve] B={args.batch} prompt={args.prompt_len} "
-          f"gen={args.tokens} kv={args.kv_dtype} "
+          f"gen={args.tokens} kv={args.kv_dtype} tp={args.tp} "
           f"TTFT={res.ttft_ms:.1f}ms TPOT={res.tpot_ms:.2f}ms")
     print("[serve] sample:", res.tokens[0][:16].tolist())
     if args.bench_json:
         _append_point(args.bench_json, {
             "mode": "static", "arch": args.arch, "quant": args.quant,
-            "kv_dtype": args.kv_dtype, "batch": args.batch,
+            "kv_dtype": args.kv_dtype, "batch": args.batch, "tp": args.tp,
             "prompt_len": args.prompt_len, "tokens": args.tokens,
             "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms})
     return res

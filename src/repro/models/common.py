@@ -168,15 +168,12 @@ def _sdpa_dense(q: Array, k: Array, v: Array, mask: Optional[Array],
         q = constrain(q, "B", None, "M")
     logits = jnp.einsum("bskgh,btkh->bkgst", q, k,
                         preferred_element_type=jnp.float32)
-    from repro.flags import DECODE_SPLIT_KV
-    if S == 1 and DECODE_SPLIT_KV:
-        # decode: keep the KV-sequence axis sharded (split-KV /
-        # flash-decoding); the softmax over T lowers to a reduce pair.
-        # Sharding heads here instead forces a full reshard of the cache
-        # every layer (EXPERIMENTS.md §Perf, deepseek decode iteration).
-        logits = constrain(logits, "B", None, None, None, "M")
-    else:
-        logits = constrain(logits, "B", "M")
+    # heads (kv-head axis) on "M" at prefill AND decode, matching the
+    # serve-pool layout (models/*.cache_roles): per-head attention is
+    # shard-local, softmax over T needs no collective, and only the
+    # o-projection psums. Sharding the KV-seq axis instead (split-KV)
+    # would force a per-layer reshard of the heads-sharded cache.
+    logits = constrain(logits, "B", "M")
     logits = logits / np.sqrt(hd)
     if mask is not None:
         if mask.ndim == 3:
@@ -415,18 +412,38 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     else:
         cache_k = jax.lax.dynamic_update_slice(kv["k"], k_wr, (0, pos, 0, 0))
         cache_v = jax.lax.dynamic_update_slice(kv["v"], v_wr, (0, pos, 0, 0))
+    # keep the written cache in the serve-pool layout (heads on "M") so the
+    # per-step update is a shard-local dynamic_update_slice, never a reshard
+    cache_k = constrain(cache_k, "B", None, "M")
+    cache_v = constrain(cache_v, "B", None, "M")
     new = dict(kv)
     new["k"], new["v"] = cache_k, cache_v
 
     q1 = q[:, 0]                        # (B, H, hd)
     if _use_decode_kernel():
-        from repro.kernels.ops import decode_attention_pallas
-        out = decode_attention_pallas(
-            q1, cache_k, cache_v, posv,
-            k_scale=ks if quantized else None,
-            v_scale=vs if quantized else None,
-            kc=kv.get("kc"), vc=kv.get("vc"),
-            interpret=jax.default_backend() != "tpu")
+        from repro.distributed.sharding import active_mesh
+        from repro.kernels.ops import decode_attention_pallas, \
+            decode_attention_tp
+        mesh = active_mesh()
+        tp = (mesh.shape["tp"] if mesh is not None
+              and "tp" in mesh.axis_names else 1)
+        interpret = jax.default_backend() != "tpu"
+        if tp > 1 and cfg.n_kv_heads % tp == 0:
+            # shard_map the kernel over the tp axis: each shard runs
+            # flash-decode on its local head slice (local q heads, local KV
+            # heads, local int8 scales; the replicated cushion block is
+            # sliced per shard on entry) — no collectives inside attention
+            out = decode_attention_tp(
+                q1, cache_k, cache_v, posv, mesh,
+                k_scale=ks if quantized else None,
+                v_scale=vs if quantized else None,
+                kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
+        else:
+            out = decode_attention_pallas(
+                q1, cache_k, cache_v, posv,
+                k_scale=ks if quantized else None,
+                v_scale=vs if quantized else None,
+                kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
     elif quantized:
         from repro.kernels.ref import flash_decode_ref
         out = flash_decode_ref(q1, cache_k, cache_v, posv, k_scale=ks,

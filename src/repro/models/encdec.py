@@ -188,8 +188,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Params
 cushion_zeros = T.cushion_zeros
 
 
-def cache_roles(cfg: ModelConfig) -> Params:
-    kv = (None, "B", "M", None, None)
+def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+    """Self- and cross-attention KV (L, B, S, K, hd): heads axis on "M",
+    matching the serve-pool layout (see transformer.cache_roles). kv_dtype
+    is part of the uniform signature and unused (encdec KV stays fp)."""
+    kv = (None, "B", None, "M", None)
     return {"k": kv, "v": kv, "xk": kv, "xv": kv}
 
 

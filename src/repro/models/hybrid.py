@@ -266,14 +266,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
 
 
 def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
-    kv = (None, "B", "M", None, None)
+    """Serve-pool sharding roles (see transformer.cache_roles): attention
+    KV (P, B, S, K, hd) shards its heads axis on "M"; the Mamba state
+    shards its channel axes — h (P, nm, B, inner, d_state) on inner, conv
+    (P, nm, B, d_conv-1, inner) on inner — mirroring the mamba/w_x "M"
+    param rules so the recurrence stays shard-local. int8 scales shard
+    with their heads axis; the fp cushion block is replicated."""
+    kv = (None, "B", None, "M", None)
     roles = {"k": kv, "v": kv,
              "h": (None, None, "B", "M", None),
              "conv": (None, None, "B", None, "M")}
     if kv_dtype is not None:
-        roles.update({"k_scale": (None, None), "v_scale": (None, None),
-                      "kc": (None, None, None, None),
-                      "vc": (None, None, None, None)})
+        roles.update({"k_scale": (None, "M"), "v_scale": (None, "M"),
+                      "kc": (), "vc": ()})
     return roles
 
 

@@ -88,6 +88,16 @@ class ModelAPI:
         return self.mod.decode_step(params, token, pos, cache, self.cfg,
                                     qcfg, **kw)
 
+    def cache_roles(self, kv_dtype=None) -> Dict[str, Tuple]:
+        """Sharding-role template of every cache leaf (leaf name -> axis
+        roles), consumed by ``distributed.sharding.cache_shardings`` to lay
+        a serving pool out over a tp mesh. Families without a template
+        (ssm's shape-polymorphic state, encdec) serve replicated."""
+        fn = getattr(self.mod, "cache_roles", None)
+        if fn is None:
+            return {}
+        return fn(self.cfg, kv_dtype=kv_dtype)
+
     @property
     def cache_batch_axes(self) -> Dict[str, int]:
         """Batch axis of every per-request cache leaf — the continuous-

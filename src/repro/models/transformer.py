@@ -160,15 +160,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
-    """KV-cache sharding roles: (L, B, S, K, hd) — batch on B-axes; the
-    sequence axis on `model` (flash-decoding split-KV) since kv-head counts
-    are often < TP width. Scales/cushion are tiny -> replicated."""
-    kv = (None, "B", "M", None, None)
+    """KV-cache sharding roles: (L, B, S, K, hd) — batch on B-axes, the
+    KV-heads axis on "M" (tensor parallel). Head sharding makes decode
+    attention collective-free: each shard attends its local heads against
+    its local KV slice and only the o-projection psums, matching the
+    flash-decode per-shard head slicing contract (kernels/ops.py
+    ``decode_attention_tp``). When the head count doesn't divide the tp
+    width the role resolver falls back to replicated for that leaf
+    (sharding.roles_pspec). int8 scales shard with their (L, K) heads axis;
+    the fp cushion block kc/vc stays REPLICATED — every shard holds the
+    full sink block bit-identically (KVSink/IntactKV: the protected prefix
+    must survive sharding exactly; consumers slice it per shard on entry)."""
+    kv = (None, "B", None, "M", None)
     roles = {"k": kv, "v": kv}
     if kv_dtype is not None:
-        roles.update({"k_scale": (None, None), "v_scale": (None, None),
-                      "kc": (None, None, None, None),
-                      "vc": (None, None, None, None)})
+        roles.update({"k_scale": (None, "M"), "v_scale": (None, "M"),
+                      "kc": (), "vc": ()})
     return roles
 
 

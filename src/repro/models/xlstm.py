@@ -333,8 +333,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0,
     return {"m": m, "s": s}
 
 
-def cache_roles(cfg: ModelConfig) -> Params:
-    """Recurrent-state sharding: batch on B, the head-dim on model."""
+def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+    """Recurrent-state sharding: batch on B, the head-dim on model.
+    kv_dtype is part of the uniform signature (ModelAPI.cache_roles) and
+    unused — the recurrent state is never int8."""
     return {"m": {"C": (None, "B", None, None, "M"),
                   "n": (None, "B", None, "M"),
                   "m": (None, "B", None)},

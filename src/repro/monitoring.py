@@ -81,6 +81,14 @@ class ServeStats:
     finished: int = 0           # requests retired (EOS or budget)
     recycles: int = 0           # admissions into a previously-used slot
 
+    def reset(self) -> None:
+        """Zero every counter, keeping ``n_slots``. The scheduler calls this
+        at the top of each ``run()`` so a stats object shared across traces
+        in one process (serve_bench's warm-up pass, repeated bench runs)
+        never leaks occupancy counters from the previous run."""
+        self.steps = self.live_slot_steps = 0
+        self.admitted = self.finished = self.recycles = 0
+
     def occupancy(self) -> float:
         return self.live_slot_steps / max(1, self.steps * self.n_slots)
 

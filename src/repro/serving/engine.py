@@ -27,7 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import QuantConfig
+from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
+
+
+def shard_params_for_serving(params, mesh):
+    """Lay params out for inference on a tp mesh: TP-only serve rules
+    (weights replicated over data/pod axes — FSDP sharding would all-gather
+    every weight per decoded token)."""
+    return jax.device_put(
+        params, SH.params_shardings(params, mesh, SH.serve_rules()))
 
 
 @dataclasses.dataclass
@@ -73,13 +82,23 @@ def bucket_steps(n_steps: int) -> int:
 
 class Engine:
     """Holds compiled prefill/decode executables for one (model, quant,
-    cushion, kv_dtype) configuration."""
+    cushion, kv_dtype) configuration.
+
+    ``mesh``: optional tp mesh (launch/mesh.py ``make_tp_mesh``). When set,
+    params are laid out with the TP-only serve rules, the KV cache shards
+    along its heads axis (models/*.cache_roles), and prefill/decode trace
+    under the mesh so the ``constrain`` hints in model code bind — the
+    whole generation loop then runs as sharding-constrained jit with the
+    pool resident across devices (no per-step host transfer; same
+    compile-once/donation properties as the single-device path)."""
 
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  cushion=None, scales=None, max_seq: int = 2048,
-                 kv_dtype=None):
+                 kv_dtype=None, mesh=None):
         self.api = api
-        self.params = params
+        self.mesh = mesh
+        self.params = (shard_params_for_serving(params, mesh)
+                       if mesh is not None else params)
         self.qcfg = qcfg
         self.cushion = cushion
         self.scales = scales
@@ -116,19 +135,24 @@ class Engine:
         self._gen_loop = jax.jit(gen_loop, static_argnums=(5, 6))
 
     def _init_cache(self, batch: int):
-        return self.api.init_cache(batch, self.max_seq,
-                                   kv_dtype=self.kv_dtype,
-                                   prefix_len=self.prefix_len)
+        cache = self.api.init_cache(batch, self.max_seq,
+                                    kv_dtype=self.kv_dtype,
+                                    prefix_len=self.prefix_len)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, SH.cache_shardings(
+                self.api.cache_roles(self.kv_dtype), cache, self.mesh))
+        return cache
 
     def _run_prefill(self, batch: Dict[str, Any]):
         """Prefill + first token. Returns (tok, pos, cache, ttft_ms)."""
         B = batch["tokens"].shape[0]
-        cache = self._init_cache(B)
-        t0 = time.perf_counter()
-        logits, cache, pos = self._prefill(self.params, batch, cache)
-        logits = logits[:, -1] if logits.ndim == 3 else logits
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok.block_until_ready()
+        with SH.use_mesh(self.mesh):
+            cache = self._init_cache(B)
+            t0 = time.perf_counter()
+            logits, cache, pos = self._prefill(self.params, batch, cache)
+            logits = logits[:, -1] if logits.ndim == 3 else logits
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok.block_until_ready()
         return tok, pos, cache, (time.perf_counter() - t0) * 1e3
 
     def generate(self, batch: Dict[str, Any], n_tokens: int,
@@ -140,8 +164,9 @@ class Engine:
         n_steps = max(0, n_tokens - 1)
         # bucketed scan length: requests in the same bucket share one
         # compiled executable; surplus steps are sliced away below.
-        toks = self._gen_loop(self.params, tok, pos, cache, key,
-                              bucket_steps(n_steps), g)
+        with SH.use_mesh(self.mesh):
+            toks = self._gen_loop(self.params, tok, pos, cache, key,
+                                  bucket_steps(n_steps), g)
         if toks.shape[0] > 1 + n_steps:
             toks = toks[:1 + n_steps]
         toks.block_until_ready()    # single host sync for the whole loop
@@ -162,15 +187,16 @@ class Engine:
         tok, pos, cache, ttft = self._run_prefill(batch)
         out = [np.asarray(tok)]
         t1 = time.perf_counter()
-        for _ in range(n_tokens - 1):
-            logits, cache = self._decode(self.params, tok, pos, cache)
-            if greedy or rng is None:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                rng, k = jax.random.split(rng)
-                tok = jax.random.categorical(k, logits).astype(jnp.int32)
-            pos = pos + 1
-            out.append(np.asarray(tok))
+        with SH.use_mesh(self.mesh):
+            for _ in range(n_tokens - 1):
+                logits, cache = self._decode(self.params, tok, pos, cache)
+                if greedy or rng is None:
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                else:
+                    rng, k = jax.random.split(rng)
+                    tok = jax.random.categorical(k, logits).astype(jnp.int32)
+                pos = pos + 1
+                out.append(np.asarray(tok))
         jax.block_until_ready(tok)
         tpot = (0.0 if n_tokens <= 1
                 else (time.perf_counter() - t1) * 1e3 / (n_tokens - 1))

@@ -27,6 +27,14 @@ Design
   admission. TTFT/TPOT are tracked per request; pool occupancy lands in
   ``monitoring.ServeStats``.
 
+Tensor parallelism: pass a ``mesh`` (launch/mesh.py ``make_tp_mesh``) and
+the pool shards along the family's ``cache_roles`` axes (KV heads, Mamba
+channels) with params under the TP-only serve rules; admission rows share
+the pool layout so the slot scatter stays shard-local, and the lock-step
+decode runs as one sharding-constrained jitted step with the pool resident
+across devices (the per-step host sync still reads only the (B,) sampled
+tokens, never the pool).
+
 Scope: greedy decoding over full-precision KV pools for families with a
 ``CACHE_BATCH_AXES`` slot layout (dense / moe / vlm / hybrid). int8 KV
 pools are static-Engine-only for now — their per-(layer,head) dequant
@@ -48,9 +56,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import QuantConfig
+from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
 from repro.monitoring import ServeStats
-from repro.serving.engine import cache_seq_len, cushion_prefix_len
+from repro.serving.engine import (cache_seq_len, cushion_prefix_len,
+                                  shard_params_for_serving)
 
 
 @dataclasses.dataclass
@@ -94,9 +104,12 @@ class ContinuousEngine:
 
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  n_slots: int = 4, max_seq: int = 2048, cushion=None,
-                 scales=None, stats: Optional[ServeStats] = None):
+                 scales=None, stats: Optional[ServeStats] = None,
+                 mesh=None):
         self.api = api
-        self.params = params
+        self.mesh = mesh
+        self.params = (shard_params_for_serving(params, mesh)
+                       if mesh is not None else params)
         self.qcfg = qcfg
         self.n_slots = n_slots
         self.max_seq = cache_seq_len(max_seq)
@@ -136,18 +149,30 @@ class ContinuousEngine:
         # Backends that can't donate (CPU) just ignore the hint.
         self._admit = jax.jit(admit, donate_argnums=(0,))
         self._step = jax.jit(step, donate_argnums=(4,))
-        self._reset_pool()
+        with SH.use_mesh(self.mesh):
+            self._reset_pool()
 
     # ------------------------------------------------------------------
     # Pool state
     # ------------------------------------------------------------------
 
     def _reset_pool(self) -> None:
-        self.cache = self.api.init_cache(self.n_slots, self.max_seq)
+        self.cache = self._shard_cache(
+            self.api.init_cache(self.n_slots, self.max_seq))
         self.pos = jnp.zeros((self.n_slots,), jnp.int32)
         self.tok = jnp.zeros((self.n_slots,), jnp.int32)
         self.live = np.zeros((self.n_slots,), bool)
         self._slots = [_Slot() for _ in range(self.n_slots)]
+
+    def _shard_cache(self, cache):
+        """Lay a pool (or B=1 admission row) out over the tp mesh along the
+        family's cache_roles axes (heads / Mamba channels; see
+        models/*.cache_roles). The admission row shares the pool's layout so
+        the slot scatter is shard-local, never a reshard."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, SH.cache_shardings(
+            self.api.cache_roles(), cache, self.mesh))
 
     def _positions_needed(self, req: Request) -> int:
         S = req.batch["tokens"].shape[1]
@@ -167,13 +192,14 @@ class ContinuousEngine:
                 f"(prefix {self.prefix_len} + prompt + budget) "
                 f"> pool max_seq {self.max_seq}")
         tpf = time.perf_counter()
-        row = self.api.init_cache(1, self.max_seq)
-        logits, row, rpos = self._prefill(self.params, req.batch, row)
-        logits = logits[:, -1] if logits.ndim == 3 else logits
-        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
-        self.cache, self.pos, self.tok = self._admit(
-            self.cache, row, jnp.asarray(slot, jnp.int32), self.pos,
-            self.tok, rpos, tok0)
+        with SH.use_mesh(self.mesh):
+            row = self._shard_cache(self.api.init_cache(1, self.max_seq))
+            logits, row, rpos = self._prefill(self.params, req.batch, row)
+            logits = logits[:, -1] if logits.ndim == 3 else logits
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+            self.cache, self.pos, self.tok = self._admit(
+                self.cache, row, jnp.asarray(slot, jnp.int32), self.pos,
+                self.tok, rpos, tok0)
         first = int(jax.block_until_ready(tok0))
         now = time.perf_counter()
 
@@ -219,8 +245,9 @@ class ContinuousEngine:
         and a slot is free (FIFO), decode the pool in lock-step, return
         outputs sorted by uid. Re-entrant: the pool and the occupancy
         stats are reset per run (compiled executables are kept)."""
-        self._reset_pool()
-        self.stats.__init__(n_slots=self.n_slots)
+        with SH.use_mesh(self.mesh):
+            self._reset_pool()
+        self.stats.reset()
         self._results: Dict[int, RequestOutput] = {}
         self._ttft: Dict[int, float] = {}
         queue = collections.deque(
@@ -242,9 +269,10 @@ class ContinuousEngine:
                                queue[0].arrival_s - (time.perf_counter() - t0))))
                 continue
 
-            self.tok, self.pos, self.cache = self._step(
-                self.params, self.tok, self.pos, jnp.asarray(self.live),
-                self.cache)
+            with SH.use_mesh(self.mesh):
+                self.tok, self.pos, self.cache = self._step(
+                    self.params, self.tok, self.pos, jnp.asarray(self.live),
+                    self.cache)
             toks = np.asarray(self.tok)     # the one host sync per step
             self.stats.steps += 1
             self.stats.live_slot_steps += int(self.live.sum())

@@ -222,3 +222,29 @@ def test_budget_validation_and_unsupported_family():
     ssm = build(reduced(get_config("xlstm-350m"), dtype="float32"))
     with pytest.raises(NotImplementedError, match="continuous"):
         ContinuousEngine(ssm, None, QN, n_slots=1, max_seq=128)
+
+
+def test_serve_stats_reset_between_runs():
+    """Regression: occupancy counters must reset between traces in one
+    process (serve_bench warms the scheduler with a full pass before
+    measuring — leaked steps/live_slot_steps would corrupt the recorded
+    occupancy). Two identical immediate-arrival traces must report
+    identical counters, and ``reset()`` zeros everything but n_slots."""
+    from repro.monitoring import ServeStats
+    s = ServeStats(n_slots=4)
+    s.steps, s.live_slot_steps, s.admitted = 10, 33, 7
+    s.finished, s.recycles = 6, 2
+    s.reset()
+    assert s.as_dict() == ServeStats(n_slots=4).as_dict()
+
+    api, params, cushion = _family_setup("paper_tiny")
+    reqs = [Request(uid=i, batch=api.make_batch(jax.random.PRNGKey(50 + i),
+                                                1, 20), max_new_tokens=4)
+            for i in range(3)]
+    ce = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                          cushion=cushion)
+    ce.run(reqs)
+    first = ce.stats.as_dict()
+    ce.run(reqs)
+    assert ce.stats.as_dict() == first, \
+        "second run must not accumulate the first run's counters"
