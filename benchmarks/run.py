@@ -15,13 +15,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def kernel_microbench():
-    """Per-call timings of the kernel oracles (CPU; kernel itself targets
-    TPU and is validated in interpret mode by tests)."""
+    """Per-call timings of the kernel oracles AND the real Pallas
+    ``w8a8_matmul`` kernel (interpret mode on CPU, native on TPU) — the
+    serving matmul path is bench-covered, not just test-covered. The
+    kernel run is parity-checked against the oracle before its timing is
+    emitted."""
     import jax
     import jax.numpy as jnp
     import numpy as np
     from benchmarks.common import emit
     from repro.kernels import ref as R
+    from repro.kernels.w8a8_matmul import w8a8_matmul
 
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randint(-127, 128, (512, 1024)), jnp.int8)
@@ -35,6 +39,21 @@ def kernel_microbench():
         f(x, w).block_until_ready()
     emit("kernel_w8a8_ref_512x1024x1024",
          (time.perf_counter() - t0) / 10 * 1e6, "int8 matmul oracle")
+
+    interpret = jax.default_backend() != "tpu"
+    g = lambda x, w: w8a8_matmul(x, w, 0.01, 2.0, 0.02,
+                                 interpret=interpret)
+    out = g(x, w)
+    out.block_until_ready()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f(x, w)),
+                               rtol=1e-6, atol=1e-5)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        g(x, w).block_until_ready()
+    emit("kernel_w8a8_pallas_512x1024x1024",
+         (time.perf_counter() - t0) / 10 * 1e6,
+         f"Pallas kernel ({'interpret' if interpret else 'tpu'}), "
+         f"parity-checked vs oracle")
 
     q = jnp.asarray(rng.randn(1, 8, 512, 64).astype(np.float32))
     k = jnp.asarray(rng.randn(1, 8, 528, 64).astype(np.float32))
@@ -295,10 +314,80 @@ def serve_bench(tp: int = 1):
             f"{tps_c:.1f} vs {tps_s:.1f} tok/s")
 
 
+def w8a8_bench():
+    """Calibrated W8A8 serving bench: fp vs per-tensor-static int8 serving
+    TTFT/TPOT on one paper_tiny trace, parity-gated. Three engines share
+    one calibration: the fp baseline (mode=none), the fp-weight true-int8
+    pt_static path (weights quantized on the fly inside the jit), and the
+    int8-resident prequantized path (--prequant; decode streams
+    1 byte/weight). The gate asserts prequantized greedy tokens equal the
+    fp-weight pt_static tokens bit-for-bit — identical int math, only the
+    weight residency differs — before any number lands in the checked-in
+    ``results/BENCH_w8a8.json`` trajectory."""
+    import json
+    import os
+
+    import jax
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.configs import QuantConfig, get_config
+    from repro.core.calibration import calibrate
+    from repro.models.registry import build
+    from repro.serving.engine import Engine
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    qfp = QuantConfig(mode="none")
+    qw8 = QuantConfig(mode="pt_static", true_int8=True)
+    cal = [api.make_batch(jax.random.PRNGKey(100 + i), 2, 48)
+           for i in range(2)]
+    scales, _ = calibrate(api, params, cal, qw8)
+    B, prompt, n_gen = 4, 64, 32
+    batch = api.make_batch(jax.random.PRNGKey(7), B, prompt)
+    max_seq = prompt + n_gen + 32
+
+    engines = {
+        "fp": Engine(api, params, qfp, max_seq=max_seq),
+        "w8a8": Engine(api, params, qw8, max_seq=max_seq, scales=scales),
+        "w8a8_prequant": Engine(api, params, qw8, max_seq=max_seq,
+                                scales=scales, prequant=True),
+    }
+    results = {}
+    for name, eng in engines.items():
+        eng.generate(batch, n_gen)          # warm/compile pass
+        res = eng.generate(batch, n_gen)
+        results[name] = res
+        emit(f"w8a8_{name}_ttft", res.ttft_ms * 1e3, "prefill wall")
+        emit(f"w8a8_{name}_tpot", res.tpot_ms * 1e3, "per-token wall")
+
+    match = bool(np.array_equal(results["w8a8_prequant"].tokens,
+                                results["w8a8"].tokens))
+    emit("w8a8_parity", float(match) * 1e6,
+         "prequant tokens == fp-weight pt_static tokens")
+    point = {"model": cfg.name, "batch": B, "prompt_len": prompt,
+             "n_gen": n_gen, "parity_match": match,
+             "weight_bytes_fp": engines["fp"].weight_bytes_fp,
+             "weight_bytes_int8_resident":
+                 engines["w8a8_prequant"].weight_bytes_int8}
+    for name, res in results.items():
+        point[f"ttft_ms_{name}"] = res.ttft_ms
+        point[f"tpot_ms_{name}"] = res.tpot_ms
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_w8a8.json"), "w") as f:
+        json.dump({"bench": "w8a8", "points": [point]}, f, indent=1)
+    if not match:
+        raise SystemExit(
+            "int8-resident (prequantized) serving diverged from the "
+            "fp-weight pt_static path (parity oracle failed)")
+
+
 EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
                  "decode_bench": decode_bench,
                  "search_bench": search_bench,
-                 "serve_bench": serve_bench}
+                 "serve_bench": serve_bench,
+                 "w8a8_bench": w8a8_bench}
 
 
 def main() -> None:
@@ -328,6 +417,7 @@ def main() -> None:
     if not args.only:
         decode_bench()
         search_bench()
+        w8a8_bench()
     from benchmarks import paper_tables as PT
     fns = PT.ALL
     if args.only:

@@ -161,16 +161,69 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def true_int_dot(x: Array, w: Array, cfg: QuantConfig,
-                 site: Optional[SiteScale]) -> Array:
-    """int8 x int8 -> int32 matmul with scalar-epilogue dequant.
+def _use_w8a8_kernel() -> bool:
+    """Route int8 matmuls through the Pallas ``w8a8_matmul`` kernel? "auto"
+    enables it on TPU backends only (lax.dot_general is the CPU oracle);
+    "pallas" forces interpret-mode execution off-TPU (validation)."""
+    from repro import flags
+    if flags.W8A8_KERNEL == "pallas":
+        return True
+    if flags.W8A8_KERNEL == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
 
-    Asymmetric activation zero-point correction:
+
+def _tile(n: int, target: int) -> int:
+    """Largest power-of-two block <= target that divides n (weight dims are
+    static per checkpoint; falls to 1 only for pathological odd dims)."""
+    t = min(target, n)
+    while n % t:
+        t //= 2
+    return max(t, 1)
+
+
+def _int8_matmul(xq: Array, w_int: Array, s_x, z_x, s_w,
+                 colsum: Array, out_dtype) -> Array:
+    """Shared int8 x int8 epilogue-fused matmul behind ``true_int_dot`` and
+    ``prequantized_int_dot``:
+
       (X_int - z) @ W_int * s_x s_w
         = (X_int @ W_int) * s_x s_w  -  z * colsum(W_int) * s_x s_w
-    colsum(W_int) is precomputable per weight; here it folds into one rank-1
-    subtract (cheap, fuses).
-    """
+
+    colsum(W_int) is precomputable per weight; it folds into one rank-1
+    subtract (cheap, fuses). On TPU (or with REPRO_W8A8_KERNEL=pallas) the
+    whole product+epilogue runs in the Pallas ``w8a8_matmul`` kernel —
+    int8 MXU tiles with the scalar dequant fused in the kernel epilogue and
+    ragged M padded/sliced inside the kernel wrapper — so every 2-D
+    ``qlinear`` site (prefill *and* the jitted decode scan) hits the
+    MXU-int8 fast path. Scalar (per-tensor static) scales only."""
+    if _use_w8a8_kernel() and w_int.ndim == 2 and jnp.ndim(s_x) == 0:
+        from repro.kernels.w8a8_matmul import w8a8_matmul
+        K, N = w_int.shape
+        lead = xq.shape[:-1]
+        M = 1
+        for d in lead:
+            M *= d
+        out = w8a8_matmul(
+            xq.reshape(M, K), w_int, s_x, z_x, s_w, colsum=colsum,
+            bm=256, bn=_tile(N, 512), bk=_tile(K, 256),
+            interpret=jax.default_backend() != "tpu")
+        return out.reshape(*lead, N).astype(out_dtype)
+    acc = jax.lax.dot_general(
+        xq, w_int, (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
+        * colsum.astype(jnp.float32)
+    return (acc * (jnp.asarray(s_x, jnp.float32)
+                   * jnp.asarray(s_w, jnp.float32))).astype(out_dtype)
+
+
+def true_int_dot(x: Array, w: Array, cfg: QuantConfig,
+                 site: Optional[SiteScale]) -> Array:
+    """int8 x int8 -> int32 matmul with scalar-epilogue dequant (see
+    ``_int8_matmul`` for the zero-point algebra and the Pallas routing).
+    Weights are quantized on the fly (constant-folds under jit when ``w``
+    is a weight); ``prequantized_int_dot`` is the int8-resident variant."""
     wq, s_w = weight_quant_int(w, cfg)
     if cfg.mode == "pt_static":
         assert site is not None
@@ -186,21 +239,23 @@ def true_int_dot(x: Array, w: Array, cfg: QuantConfig,
         xq = xq - off
         z_x = z_x - off
     xq = xq.astype(jnp.int8)
-    acc = jax.lax.dot_general(
-        xq, wq, (((xq.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
     colsum = jnp.sum(wq.astype(jnp.int32), axis=0)
-    acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
-        * colsum.astype(jnp.float32)
-    return (acc * (jnp.asarray(s_x, jnp.float32) * s_w)).astype(x.dtype)
+    return _int8_matmul(xq, wq, s_x, z_x, s_w, colsum, x.dtype)
 
 
 def prequantized_int_dot(x: Array, w: Dict[str, Array], cfg: QuantConfig,
                          site: Optional[SiteScale]) -> Array:
     """Serving path with int8-resident weights: HBM streams 1 byte/weight
     (2x less than bf16) straight into the int8 MXU matmul — no on-the-fly
-    weight requantization, no bf16 dequant materialization."""
-    assert cfg.mode == "pt_static" and site is not None
+    weight requantization, no bf16 dequant materialization. The stored
+    colsum feeds the zero-point correction without re-reducing the weight.
+    Requires calibrated static scales (``site``): per-tensor static W8A8 is
+    the deployment configuration the CushionCache prefix rescues."""
+    if cfg.mode != "pt_static" or site is None:
+        raise ValueError(
+            "prequantized (int8-resident) weights serve the pt_static "
+            "deployment path only and need calibrated site scales; got "
+            f"mode={cfg.mode!r}, site={'set' if site is not None else None}")
     s_x, z_x = site.scale, site.zero
     xq = quantize(x, s_x, z_x, cfg.a_bits, cfg.symmetric_a)
     if not cfg.symmetric_a:
@@ -208,13 +263,8 @@ def prequantized_int_dot(x: Array, w: Dict[str, Array], cfg: QuantConfig,
         xq = xq - off
         z_x = z_x - off
     xq = xq.astype(jnp.int8)
-    acc = jax.lax.dot_general(
-        xq, w["w_int"], (((xq.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
-        * w["colsum"].astype(jnp.float32)
-    return (acc * (jnp.asarray(s_x, jnp.float32) * w["w_scale"])
-            ).astype(x.dtype)
+    return _int8_matmul(xq, w["w_int"], s_x, z_x, w["w_scale"],
+                        w["colsum"], x.dtype)
 
 
 def prequantize(w: Array, cfg: QuantConfig) -> Dict[str, Array]:
@@ -230,9 +280,11 @@ _PREQUANT_KEYS = ("wqkv", "wo", "w_up", "w_gate", "w_down", "w_in", "w_out",
 def prequantize_tree(params: Any, cfg: QuantConfig,
                      min_ndim: int = 2) -> Any:
     """Replace qdot-consumed weight matrices with int8-resident Quantized
-    dicts. Only keys consumed via `qlinear`/`qdot` are converted (MoE /
-    gate projections consumed by raw einsums keep fp); embeddings stay fp
-    (gather lookups)."""
+    dicts. Only keys consumed via `qlinear`/`qdot` are converted (MoE
+    expert/gate projections consumed by raw einsums — and the Arctic dense
+    residual branch living under the same ``moe`` subtree — keep fp);
+    embeddings stay fp (gather lookups). Hybrid period params nest their
+    sublayers in lists; those are descended too."""
     def eligible(k, v, path):
         if not (hasattr(v, "ndim") and v.ndim >= min_ndim):
             return False
@@ -242,21 +294,24 @@ def prequantize_tree(params: Any, cfg: QuantConfig,
             return True
         return k == "w" and path and path[-1] == "head"
 
+    def convert(v):
+        if v.ndim == 2:
+            return prequantize(v, cfg)
+        # stacked over layers/periods: quantize per layer slice
+        wq, scale = jax.vmap(lambda a: weight_quant_int(a, cfg))(v)
+        return {"w_int": wq, "w_scale": scale,
+                "colsum": jnp.sum(wq.astype(jnp.int32), axis=-2)}
+
     def visit(d, path=()):
         out = {}
         for k, v in d.items():
             if isinstance(v, dict):
                 out[k] = visit(v, path + (k,))
+            elif isinstance(v, (list, tuple)):
+                out[k] = [visit(e, path + (k, i)) if isinstance(e, dict)
+                          else e for i, e in enumerate(v)]
             elif eligible(k, v, path):
-                if v.ndim == 2:
-                    out[k] = prequantize(v, cfg)
-                else:
-                    # stacked over layers: quantize per layer slice
-                    wq, scale = jax.vmap(
-                        lambda a: weight_quant_int(a, cfg))(v)
-                    out[k] = {"w_int": wq, "w_scale": scale,
-                              "colsum": jnp.sum(wq.astype(jnp.int32),
-                                                axis=-2)}
+                out[k] = convert(v)
             else:
                 out[k] = v
         return out

@@ -157,8 +157,24 @@ def _drop_indivisible(full: Sequence[Any], shape: Tuple[int, ...],
 
 def rules_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
                 rules=DEFAULT_RULES) -> P:
-    # int8-resident (prequantized) weights keep the parent weight's rules
+    # int8-resident (prequantized) {w_int, w_scale, colsum} leaves: w_int
+    # shards exactly like its fp parent weight (the rules match the parent
+    # path), the (N,)-shaped colsum follows the parent's OUTPUT axis (it is
+    # a per-output-column reduction — the zero-point correction must stay
+    # local to the shard that owns those columns), and the scalar/stacked
+    # w_scale replicates.
     path = re.sub(r"/w_int$", "", path)
+    if path.endswith("/w_scale"):
+        return P()
+    mcol = re.match(r"^(.*)/colsum$", path)
+    if mcol:
+        for rx, roles in rules:
+            if re.search(rx, mcol.group(1)):
+                out_role = roles[-1] if roles else None
+                full = (None,) * (len(shape) - 1) \
+                    + (_resolve_role(out_role, mesh),)
+                return _drop_indivisible(full, shape, mesh)
+        return P()
     for rx, roles in rules:
         if re.search(rx, path):
             pads = (None,) * (len(shape) - len(roles))

@@ -28,3 +28,10 @@ def force_host_device_count(n: int) -> None:
 # TPU backends, jnp oracle elsewhere; "pallas" / "jnp" force either path
 # (the forced Pallas path runs in interpret mode off-TPU — validation only).
 DECODE_KERNEL = os.environ.get("REPRO_DECODE_KERNEL", "auto")
+
+# int8 matmul kernel routing for the true-int8 serving path
+# (core.quantization.true_int_dot / prequantized_int_dot): "auto" = the
+# Pallas w8a8_matmul kernel on TPU backends, lax.dot_general elsewhere;
+# "pallas" / "jnp" force either path (forced Pallas runs in interpret mode
+# off-TPU — validation only).
+W8A8_KERNEL = os.environ.get("REPRO_W8A8_KERNEL", "auto")

@@ -149,7 +149,10 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
 
     q: (B, H, hd) — the one new query per sequence.
     k/v: (B, Smax, K, hd) cache in storage layout; fp, or int8 when
-        k_scale/v_scale ((K,) fp32 per-head dequant scales) are given.
+        k_scale/v_scale are given — (K,) fp32 per-head dequant scales
+        shared by the batch, or per-row (B, K) scales (the continuous
+        pool calibrates each slot's scales at its own admission prefill;
+        the index map then routes row b's scales to its programs).
     pos: () or (B,) int32 — absolute position of each row's just-written
         token; only cache positions <= pos[b] are attended by row b. A
         scalar is shared by the whole batch; a vector gives every row its
@@ -208,8 +211,11 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     ]
     args = [posa, q4, k, v]
     if quantized:
-        in_specs += [pl.BlockSpec((1,), lambda b, j: (b % K,)),
-                     pl.BlockSpec((1,), lambda b, j: (b % K,))]
+        if jnp.ndim(k_scale) == 2:      # per-row (B, K) slot scales
+            sspec = pl.BlockSpec((1, 1), lambda b, j: (b // K, b % K))
+        else:                           # (K,) shared by the batch
+            sspec = pl.BlockSpec((1,), lambda b, j: (b % K,))
+        in_specs += [sspec, sspec]
         args += [jnp.asarray(k_scale, jnp.float32),
                  jnp.asarray(v_scale, jnp.float32)]
     if m:

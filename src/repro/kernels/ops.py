@@ -110,7 +110,8 @@ def decode_attention_tp(q: jax.Array, k: jax.Array, v: jax.Array, pos,
                                aligned with its local KV heads
       k/v      (B, Smax, K, hd) KV-heads axis sharded (the serve-pool layout
                                from models/*.cache_roles)
-      k/v_scale (K,)           sharded with the heads they dequantize
+      k/v_scale (K,) or (B,K)  sharded with the heads they dequantize
+                               (per-slot scales keep batch replicated)
       kc/vc    (m, K, hd)      stored replicated (cushion bit-identity per
                                shard); sliced to the local heads on entry
       pos      () or (B,)      replicated
@@ -128,12 +129,13 @@ def decode_attention_tp(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     hs = P(None, axis, None)             # (B, H, hd) heads-sharded
     kvs = P(None, None, axis, None)      # (B, Smax, K, hd) kv-heads-sharded
     if quantized:
+        sspec = P(None, axis) if jnp.ndim(k_scale) == 2 else P(axis)
         def body(q, k, v, pos, ksc, vsc, kc, vc):
             return flash_decode(q, k, v, pos, k_scale=ksc, v_scale=vsc,
                                 kc=kc, vc=vc, interpret=interpret)
         f = shard_map_compat(
             body, mesh,
-            in_specs=(hs, kvs, kvs, pos_spec, P(axis), P(axis),
+            in_specs=(hs, kvs, kvs, pos_spec, sspec, sspec,
                       P(None, axis, None), P(None, axis, None)),
             out_specs=hs)
         return f(q, k, v, pos, k_scale, v_scale, kc, vc)

@@ -74,7 +74,9 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     for quantized caches).
 
     q: (B,H,hd); k/v: (B,Smax,K,hd) — fp, or int8 with per-head dequant
-    scales k_scale/v_scale (K,). kc/vc: (m,K,hd) fp cushion block covering
+    scales k_scale/v_scale (K,), or per-row (B,K) slot scales (continuous
+    batching: each slot's scales come from its own admission prefill).
+    kc/vc: (m,K,hd) fp cushion block covering
     absolute positions [0:m) (int8 caches keep the sink block intact; the
     block is visible to every row regardless of pos — the sink is never
     evicted). pos: () or (B,) — row b attends positions [0:pos[b]] (plus
@@ -89,8 +91,14 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     if k_scale is not None:
-        kf = kf * k_scale.astype(jnp.float32)[None, None, :, None]
-        vf = vf * v_scale.astype(jnp.float32)[None, None, :, None]
+        ks = k_scale.astype(jnp.float32)
+        vs = v_scale.astype(jnp.float32)
+        if ks.ndim == 2:                       # per-row (B, K)
+            kf = kf * ks[:, None, :, None]
+            vf = vf * vs[:, None, :, None]
+        else:
+            kf = kf * ks[None, None, :, None]
+            vf = vf * vs[None, None, :, None]
     if m:
         kcb = jnp.broadcast_to(kc.astype(jnp.float32)[None], (B,) + kc.shape)
         vcb = jnp.broadcast_to(vc.astype(jnp.float32)[None], (B,) + vc.shape)

@@ -40,6 +40,7 @@ def _kernel(x_ref, w_ref, colsum_ref, scale_ref, zx_ref, o_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
+                colsum: jax.Array | None = None,
                 bm: int = 256, bn: int = 512, bk: int = 256,
                 interpret: bool = False) -> jax.Array:
     """x_int: (M,K) int8; w_int: (K,N) int8; s_x/z_x/s_w scalar fp32.
@@ -47,7 +48,11 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
 
     M may be ragged (serving token counts): it is zero-padded up to the
     tile internally and the output sliced back. K/N are weight dimensions —
-    static per checkpoint — and must tile exactly."""
+    static per checkpoint — and must tile exactly.
+
+    colsum: optional precomputed (N,) int32 column sums of ``w_int`` — the
+    prequantized serving path stores them with the int8 weights so the
+    zero-point correction never re-reduces the weight per call."""
     M, K = x_int.shape
     K2, N = w_int.shape
     assert K == K2
@@ -59,7 +64,9 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
         # padded rows compute -z_x*colsum garbage; sliced off before return
         x_int = jnp.pad(x_int, ((0, Mp - M), (0, 0)))
     n_k = K // bk
-    colsum = jnp.sum(w_int.astype(jnp.int32), axis=0)   # (N,), tiny
+    if colsum is None:
+        colsum = jnp.sum(w_int.astype(jnp.int32), axis=0)   # (N,), tiny
+    colsum = colsum.astype(jnp.int32)
     scale = (jnp.asarray(s_x, jnp.float32)
              * jnp.asarray(s_w, jnp.float32)).reshape(1)
     zx = jnp.asarray(z_x, jnp.float32).reshape(1)

@@ -8,6 +8,15 @@ The default (static) mode runs one Engine batch: device-resident decode
 (one jitted lax.scan — no per-token host sync); --kv-dtype int8 serves
 from a quantized KV cache with the cushion prefix kept intact in fp.
 
+--quant pt_static serves the calibrated true-int8 W8A8 deployment path:
+site scales are calibrated at engine load over --calib-batches synthetic
+batches (under the cushion when one is attached), and --prequant makes the
+weights int8-resident ({w_int, w_scale, colsum} dicts; decode streams
+1 byte/weight through the Pallas w8a8_matmul path on TPU):
+
+    python -m repro.launch.serve --arch paper_tiny --quant pt_static \
+        --prequant --bench-json results/BENCH_w8a8.json
+
 --mode continuous replays a Poisson-arrival request trace through the
 continuous-batching scheduler (``serving.scheduler.ContinuousEngine``):
 requests arrive at --rate req/s, are admitted into a pool of --slots cache
@@ -73,13 +82,21 @@ def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
     return reqs
 
 
-def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None):
+def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
+                   calib_batches=None):
     reqs = poisson_trace(api, args.seed, args.n_requests, args.rate,
                          prompt_lens=(args.prompt_len, args.prompt_len + 8),
                          budgets=(args.tokens, max(1, args.tokens // 2)))
     eng = ContinuousEngine(api, params, qcfg, n_slots=args.slots,
                            max_seq=args.prompt_len + 8 + args.tokens + 32,
-                           mesh=mesh)
+                           mesh=mesh,
+                           kv_dtype=None if args.kv_dtype == "fp"
+                           else args.kv_dtype,
+                           calib_batches=calib_batches,
+                           prequant=args.prequant)
+    print(f"[serve] resident weights: "
+          f"fp={eng.stats.weight_bytes_fp / 2 ** 20:.1f} MiB "
+          f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB")
     if bench_path:
         eng.run(reqs)           # warm/compile pass; measure steady state
     outs = eng.run(reqs)
@@ -97,7 +114,8 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None):
           f"p99={np.percentile(lat, 99) * 1e3:.0f}ms occupancy={occ:.2f}")
     if bench_path:
         point = {"mode": "continuous", "arch": args.arch,
-                 "quant": args.quant, "slots": args.slots,
+                 "quant": args.quant, "prequant": args.prequant,
+                 "kv_dtype": args.kv_dtype, "slots": args.slots,
                  "rate": args.rate, "n_requests": args.n_requests,
                  "tokens_per_s": tps,
                  "p50_latency_s": float(np.percentile(lat, 50)),
@@ -152,11 +170,23 @@ def main(argv=None):
                          "meshes alike")
     ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
                     help="KV-cache storage precision (int8 halves decode "
-                         "HBM traffic; cushion prefix stays fp; static "
-                         "mode only — the continuous pool serves fp KV)")
+                         "HBM traffic; cushion prefix stays fp; the "
+                         "continuous pool calibrates per-slot scales at "
+                         "each admission prefill)")
+    ap.add_argument("--prequant", action="store_true",
+                    help="serve int8-resident weights: calibrate pt_static "
+                         "site scales at load, prequantize the param tree "
+                         "(1 byte/weight streamed into the W8A8 matmul "
+                         "path); requires --quant pt_static")
+    ap.add_argument("--calib-batches", type=int, default=2,
+                    help="pt_static: number of calibration batches drawn "
+                         "from the synthetic pipeline at engine load")
     ap.add_argument("--bench-json", default=None,
                     help="append a trajectory point to this file")
     args = ap.parse_args(argv)
+    if args.prequant and args.quant != "pt_static":
+        ap.error("--prequant requires --quant pt_static (int8-resident "
+                 "weights serve the per-tensor static deployment path)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -174,29 +204,41 @@ def main(argv=None):
             params = ckpt.restore(step, like=like)["params"]
             print(f"[serve] restored step {step}")
 
-    qcfg = QuantConfig(mode=args.quant)
+    # pt_static serves the true-int8 deployment path (the one --prequant
+    # makes int8-resident); dynamic modes keep the fake-quant fidelity path
+    qcfg = QuantConfig(mode=args.quant,
+                       true_int8=args.quant == "pt_static")
     mesh = None
     if args.tp > 1:
         from repro.launch.mesh import make_tp_mesh
         mesh = make_tp_mesh(args.tp)
         print(f"[serve] tp={args.tp} mesh over "
               f"{[str(d) for d in mesh.devices.flat]}")
-    if args.mode == "continuous":
-        if args.kv_dtype != "fp":
-            ap.error("--mode continuous serves fp KV pools only "
-                     "(per-slot int8 scale calibration is future work)")
-        return run_continuous(api, params, qcfg, args,
-                              bench_path=args.bench_json, mesh=mesh)
 
     corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
     pipe = Pipeline(corpus, batch=args.batch, seq_len=args.prompt_len,
                     seed=args.seed + 1)
+    calib = None
+    if args.quant == "pt_static":
+        calib = [{k: jnp.asarray(v) for k, v in pipe.get_batch(1000 + i).items()}
+                 for i in range(args.calib_batches)]
+        print(f"[serve] pt_static: calibrating site scales over "
+              f"{len(calib)} batches at engine load")
+
+    if args.mode == "continuous":
+        return run_continuous(api, params, qcfg, args,
+                              bench_path=args.bench_json, mesh=mesh,
+                              calib_batches=calib)
+
     batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(0).items()}
 
     eng = Engine(api, params, qcfg,
                  max_seq=args.prompt_len + args.tokens + 32,
                  kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
-                 mesh=mesh)
+                 mesh=mesh, calib_batches=calib, prequant=args.prequant)
+    print(f"[serve] resident weights: "
+          f"fp={eng.weight_bytes_fp / 2 ** 20:.1f} MiB "
+          f"int8={eng.weight_bytes_int8 / 2 ** 20:.1f} MiB")
     if args.bench_json:
         eng.generate(batch, args.tokens)     # warm/compile: the recorded
         # point must measure steady-state decode, not scan-loop tracing
@@ -208,8 +250,11 @@ def main(argv=None):
     if args.bench_json:
         _append_point(args.bench_json, {
             "mode": "static", "arch": args.arch, "quant": args.quant,
-            "kv_dtype": args.kv_dtype, "batch": args.batch, "tp": args.tp,
+            "prequant": args.prequant, "kv_dtype": args.kv_dtype,
+            "batch": args.batch, "tp": args.tp,
             "prompt_len": args.prompt_len, "tokens": args.tokens,
+            "weight_bytes_fp": eng.weight_bytes_fp,
+            "weight_bytes_int8": eng.weight_bytes_int8,
             "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms})
     return res
 

@@ -123,6 +123,27 @@ def placeholder_scales(sites: Tuple[str, ...], n_layers: int) -> Params:
     return {s: one() for s in sites}
 
 
+def resolve_scales(scales: Optional[Params], sites: Tuple[str, ...],
+                   n_layers: int, qcfg: QuantConfig) -> Params:
+    """Per-layer scales tree for a forward: the calibrated tree when given,
+    else placeholders. Refuses ``pt_static`` with no calibrated scales —
+    the placeholder (scale=1, zero=0) tree would silently clip every
+    activation to [0, 255] and produce garbage logits, which is exactly the
+    failure mode a served model must never hit. Callers that only need a
+    quantized *lowering* (dry-runs) pass ``placeholder_all_scales``
+    explicitly and bypass this guard."""
+    if scales is not None:
+        return {s: scales[s] for s in sites}
+    if qcfg.mode == "pt_static":
+        raise ValueError(
+            "pt_static forward without calibrated scales: per-tensor static "
+            "quantization needs site scales from core.calibration.calibrate "
+            "(serve.py runs it at engine load via --calib-batches); refusing "
+            "to run on placeholder scales, which would produce wrong logits "
+            "silently")
+    return placeholder_scales(sites, n_layers)
+
+
 # ---------------------------------------------------------------------------
 # GQA attention
 # ---------------------------------------------------------------------------
@@ -347,8 +368,14 @@ def _use_decode_kernel() -> bool:
 
 def quantize_kv(x: Array, scale: Array) -> Array:
     """Symmetric per-head int8 KV quantization (the core quantizer with a
-    per-head scale). x: (..., K, hd); scale: (K,) fp32."""
-    q = Q.quantize(x.astype(jnp.float32), scale[..., :, None],
+    per-head scale). x: (..., K, hd); scale: (K,) fp32 — or per-row (B, K)
+    against x (B, S, K, hd) (continuous batching: every cache slot carries
+    the scales its own admission prefill calibrated)."""
+    if scale.ndim == 2 and x.ndim == 4:
+        scale = scale[:, None, :, None]          # (B,K) -> (B,1,K,1)
+    else:
+        scale = scale[..., :, None]
+    q = Q.quantize(x.astype(jnp.float32), scale,
                    jnp.zeros(()), bits=8, symmetric=True)
     return q.astype(jnp.int8)
 
@@ -383,8 +410,11 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     where the cushion/sink block is kept intact in fp (KVSink/IntactKV rule)
     and the int8 tensors hold content positions [m:Smax) only. The new
     token's KV is quantized with the static per-(layer,head) scales derived
-    at prefill. Attention runs on the Pallas split-KV flash-decode kernel on
-    TPU, or the jnp oracle elsewhere. Returns (y, updated kv dict).
+    at prefill; per-slot scales (B, K) are accepted too (the continuous
+    pool calibrates each slot's scales at its own admission prefill —
+    quantization, dequant and the kernel read are then all per-row).
+    Attention runs on the Pallas split-KV flash-decode kernel on TPU, or
+    the jnp oracle elsewhere. Returns (y, updated kv dict).
     """
     B = x.shape[0]
     qkv = qlinear(x, p["wqkv"], p.get("bqkv"), qcfg, scales, "qkv", taps)

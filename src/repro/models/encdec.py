@@ -100,8 +100,8 @@ def encode(params: Params, frames: Array, cfg: ModelConfig,
     Te = x.shape[1]
     positions = jnp.arange(Te)
     ne = cfg.encdec.encoder_layers
-    lscales = (scales["enc"] if scales is not None
-               else C.placeholder_scales(ENC_SITES, ne))
+    lscales = C.resolve_scales(scales["enc"] if scales is not None
+                               else None, ENC_SITES, ne, qcfg)
 
     def body(h, xs):
         lp, lsc = xs
@@ -134,8 +134,8 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = m + jnp.arange(S)
     L = cfg.n_layers
-    lscales = (scales["dec"] if scales is not None
-               else C.placeholder_scales(DEC_SITES, L))
+    lscales = C.resolve_scales(scales["dec"] if scales is not None
+                               else None, DEC_SITES, L, qcfg)
     pre = cushion["kv"] if cushion is not None else {
         "k": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
         "v": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
@@ -188,7 +188,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Params
 cushion_zeros = T.cushion_zeros
 
 
-def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None,
+                per_slot_scales: bool = False) -> Params:
     """Self- and cross-attention KV (L, B, S, K, hd): heads axis on "M",
     matching the serve-pool layout (see transformer.cache_roles). kv_dtype
     is part of the uniform signature and unused (encdec KV stays fp)."""
@@ -206,8 +207,8 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = m + jnp.arange(S)
     L = cfg.n_layers
-    lscales = (scales["dec"] if scales is not None
-               else C.placeholder_scales(DEC_SITES, L))
+    lscales = C.resolve_scales(scales["dec"] if scales is not None
+                               else None, DEC_SITES, L, qcfg)
     pre = cushion["kv"] if cushion is not None else {
         "k": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
         "v": jnp.zeros((L, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
@@ -247,8 +248,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                 scales: Optional[Params] = None):
     x = C.embed_tokens(params, token[:, None], cfg)
     L = cfg.n_layers
-    lscales = (scales["dec"] if scales is not None
-               else C.placeholder_scales(DEC_SITES, L))
+    lscales = C.resolve_scales(scales["dec"] if scales is not None
+                               else None, DEC_SITES, L, qcfg)
 
     def body(h, xs):
         lp, lsc, ck, cv, xk, xv = xs

@@ -184,8 +184,7 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
     nm = n_mamba_per_period(cfg)
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = m + jnp.arange(S)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, n_periods))
+    lscales = C.resolve_scales(scales, SITES, n_periods, qcfg)
 
     if cushion is not None:
         pre_kv = cushion["kv"]
@@ -237,9 +236,11 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
-               kv_dtype=None, prefix_len: int = 0) -> Params:
+               kv_dtype=None, prefix_len: int = 0,
+               per_slot_scales: bool = False) -> Params:
     """kv_dtype "int8": attention KV stored int8 with per-(period,head)
-    scales and a protected fp cushion block (see transformer.init_cache);
+    scales — per-slot (P, batch, K) when ``per_slot_scales`` (continuous
+    pool) — and a protected fp cushion block (see transformer.init_cache);
     Mamba states always stay fp."""
     dt = dtype or C.dtype_of(cfg)
     n_periods, _ = layout(cfg)
@@ -257,15 +258,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
             raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
         cache["k"] = cache["k"].astype(jnp.int8)
         cache["v"] = cache["v"].astype(jnp.int8)
+        sshape = ((n_periods, batch, K) if per_slot_scales
+                  else (n_periods, K))
         cache.update({
-            "k_scale": jnp.ones((n_periods, K), jnp.float32),
-            "v_scale": jnp.ones((n_periods, K), jnp.float32),
+            "k_scale": jnp.ones(sshape, jnp.float32),
+            "v_scale": jnp.ones(sshape, jnp.float32),
             "kc": jnp.zeros((n_periods, prefix_len, K, hd), dt),
             "vc": jnp.zeros((n_periods, prefix_len, K, hd), dt)})
     return cache
 
 
-def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None,
+                per_slot_scales: bool = False) -> Params:
     """Serve-pool sharding roles (see transformer.cache_roles): attention
     KV (P, B, S, K, hd) shards its heads axis on "M"; the Mamba state
     shards its channel axes — h (P, nm, B, inner, d_state) on inner, conv
@@ -277,8 +281,8 @@ def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
              "h": (None, None, "B", "M", None),
              "conv": (None, None, "B", None, "M")}
     if kv_dtype is not None:
-        roles.update({"k_scale": (None, "M"), "v_scale": (None, "M"),
-                      "kc": (), "vc": ()})
+        sc = (None, "B", "M") if per_slot_scales else (None, "M")
+        roles.update({"k_scale": sc, "v_scale": sc, "kc": (), "vc": ()})
     return roles
 
 
@@ -297,8 +301,7 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     nm = n_mamba_per_period(cfg)
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = m + jnp.arange(S)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, n_periods))
+    lscales = C.resolve_scales(scales, SITES, n_periods, qcfg)
     K, hd = cfg.n_kv_heads, cfg.head_dim
     if cushion is not None:
         pre_kv = cushion["kv"]
@@ -387,8 +390,7 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
     x = C.embed_tokens(params, token[:, None], cfg)
     n_periods, kinds = layout(cfg)
     nm = n_mamba_per_period(cfg)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, n_periods))
+    lscales = C.resolve_scales(scales, SITES, n_periods, qcfg)
 
     kv_keys = [k for k in ("k", "v", "k_scale", "v_scale", "kc", "vc")
                if k in cache]

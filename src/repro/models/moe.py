@@ -157,8 +157,7 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
     S = x.shape[1]
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = (m if pos_offset is None else pos_offset) + jnp.arange(S)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, cfg.n_layers))
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
     pre = cushion["kv"] if cushion is not None else _empty_prefix(cfg, x.dtype)
 
     def body(h, xs):
@@ -209,8 +208,7 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     S = x.shape[1]
     cache, m = write_cushion_to_cache(cache, cushion)
     positions = m + jnp.arange(S)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, cfg.n_layers))
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
     pre = cushion["kv"] if cushion is not None else _empty_prefix(cfg, x.dtype)
 
     def body(h, xs):
@@ -241,8 +239,7 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
     batching). Expert capacity/dispatch is per-row at S=1, so lock-step
     decode of independent slots stays row-local."""
     x = C.embed_tokens(params, token[:, None], cfg)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, cfg.n_layers))
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
 
     def body(h, xs):
         lp, lsc, kvc = xs

@@ -66,9 +66,12 @@ class ModelAPI:
                                 **_extra_kwargs(self.cfg, batch), **kw)
 
     def init_cache(self, batch: int, max_seq: int, dtype=None,
-                   kv_dtype=None, prefix_len: int = 0):
+                   kv_dtype=None, prefix_len: int = 0,
+                   per_slot_scales: bool = False):
         """kv_dtype "int8" requests quantized KV storage (attention-cache
-        families only); prefix_len sizes the protected fp cushion block."""
+        families only); prefix_len sizes the protected fp cushion block;
+        per_slot_scales gives every batch row its own dequant scales
+        (continuous-batching pools, calibrated per admission prefill)."""
         if kv_dtype is None:
             return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype)
         if self.cfg.family not in (Family.DENSE, Family.MOE, Family.VLM,
@@ -76,7 +79,8 @@ class ModelAPI:
             raise ValueError(
                 f"kv_dtype={kv_dtype!r} unsupported for {self.cfg.family}")
         return self.mod.init_cache(self.cfg, batch, max_seq, dtype=dtype,
-                                   kv_dtype=kv_dtype, prefix_len=prefix_len)
+                                   kv_dtype=kv_dtype, prefix_len=prefix_len,
+                                   per_slot_scales=per_slot_scales)
 
     def prefill(self, params, batch, cache, qcfg: QuantConfig, **kw):
         return self.mod.prefill(params, batch["tokens"], cache, self.cfg,
@@ -88,7 +92,8 @@ class ModelAPI:
         return self.mod.decode_step(params, token, pos, cache, self.cfg,
                                     qcfg, **kw)
 
-    def cache_roles(self, kv_dtype=None) -> Dict[str, Tuple]:
+    def cache_roles(self, kv_dtype=None,
+                    per_slot_scales: bool = False) -> Dict[str, Tuple]:
         """Sharding-role template of every cache leaf (leaf name -> axis
         roles), consumed by ``distributed.sharding.cache_shardings`` to lay
         a serving pool out over a tp mesh. Families without a template
@@ -96,7 +101,8 @@ class ModelAPI:
         fn = getattr(self.mod, "cache_roles", None)
         if fn is None:
             return {}
-        return fn(self.cfg, kv_dtype=kv_dtype)
+        return fn(self.cfg, kv_dtype=kv_dtype,
+                  per_slot_scales=per_slot_scales)
 
     @property
     def cache_batch_axes(self) -> Dict[str, int]:

@@ -97,12 +97,8 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
     m = 0 if cushion is None else cushion["kv"]["k"].shape[1]
     positions = (m if pos_offset is None else pos_offset) + jnp.arange(S)
 
-    if scales is None:
-        lscales = C.placeholder_scales(SITES, cfg.n_layers)
-        head_sc = None
-    else:
-        lscales = {s: scales[s] for s in SITES}
-        head_sc = scales
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
+    head_sc = scales
 
     def body(h, xs):
         lp, lsc, lpre = xs
@@ -138,12 +134,18 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None, kv_dtype=None, prefix_len: int = 0) -> Params:
+               dtype=None, kv_dtype=None, prefix_len: int = 0,
+               per_slot_scales: bool = False) -> Params:
     """kv_dtype None -> fp cache {"k","v"}. kv_dtype "int8" -> quantized
     cache: int8 k/v storage (halves decode HBM traffic) + per-(layer,head)
     dequant scales + a full-precision cushion block kc/vc of `prefix_len`
     rows — the sink/pivot-token KV stays intact (KVSink/IntactKV) while the
-    int8 tensors hold content positions [prefix_len:max_seq)."""
+    int8 tensors hold content positions [prefix_len:max_seq).
+
+    per_slot_scales gives every batch row its own (layer, head) scales —
+    shape (L, batch, K) — for the continuous-batching pool, where slots
+    admitted at different times each calibrate scales from their own
+    admission prefill."""
     dt = dtype or C.dtype_of(cfg)
     K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
     if kv_dtype is None:
@@ -151,15 +153,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                 "v": jnp.zeros((L, batch, max_seq, K, hd), dt)}
     if kv_dtype not in ("int8", jnp.int8):
         raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+    sshape = (L, batch, K) if per_slot_scales else (L, K)
     return {"k": jnp.zeros((L, batch, max_seq, K, hd), jnp.int8),
             "v": jnp.zeros((L, batch, max_seq, K, hd), jnp.int8),
-            "k_scale": jnp.ones((L, K), jnp.float32),
-            "v_scale": jnp.ones((L, K), jnp.float32),
+            "k_scale": jnp.ones(sshape, jnp.float32),
+            "v_scale": jnp.ones(sshape, jnp.float32),
             "kc": jnp.zeros((L, prefix_len, K, hd), dt),
             "vc": jnp.zeros((L, prefix_len, K, hd), dt)}
 
 
-def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None,
+                per_slot_scales: bool = False) -> Params:
     """KV-cache sharding roles: (L, B, S, K, hd) — batch on B-axes, the
     KV-heads axis on "M" (tensor parallel). Head sharding makes decode
     attention collective-free: each shard attends its local heads against
@@ -174,8 +178,8 @@ def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
     kv = (None, "B", None, "M", None)
     roles = {"k": kv, "v": kv}
     if kv_dtype is not None:
-        roles.update({"k_scale": (None, "M"), "v_scale": (None, "M"),
-                      "kc": (), "vc": ()})
+        sc = (None, "B", "M") if per_slot_scales else (None, "M")
+        roles.update({"k_scale": sc, "v_scale": sc, "kc": (), "vc": ()})
     return roles
 
 
@@ -208,12 +212,21 @@ def write_prompt_kv(cache: Params, ks: Array, vs: Array, m: int) -> Params:
     """Write prefill KV (stacked (L,B,S,K,hd) fp) into the cache at absolute
     positions [m:m+S]. For int8 caches this also derives the static
     per-(layer,head) dequant scales from the prompt KV — decode steps reuse
-    them (new tokens are clipped into the calibrated range)."""
+    them (new tokens are clipped into the calibrated range). A cache with
+    per-slot scale leaves ((L,B,K); continuous-batching admission rows)
+    calibrates each batch row's scales from its own prompt instead."""
     if "k_scale" in cache:
-        k_scale = jax.vmap(C.kv_scales_from)(ks)        # (L, K)
-        v_scale = jax.vmap(C.kv_scales_from)(vs)
-        kq = jax.vmap(C.quantize_kv)(ks, k_scale)
-        vq = jax.vmap(C.quantize_kv)(vs, v_scale)
+        if cache["k_scale"].ndim == 3:      # per-slot (L, B, K)
+            per_row = jax.vmap(jax.vmap(C.kv_scales_from))
+            k_scale = per_row(ks)
+            v_scale = per_row(vs)
+            kq = jax.vmap(jax.vmap(C.quantize_kv))(ks, k_scale)
+            vq = jax.vmap(jax.vmap(C.quantize_kv))(vs, v_scale)
+        else:
+            k_scale = jax.vmap(C.kv_scales_from)(ks)    # (L, K)
+            v_scale = jax.vmap(C.kv_scales_from)(vs)
+            kq = jax.vmap(C.quantize_kv)(ks, k_scale)
+            vq = jax.vmap(C.quantize_kv)(vs, v_scale)
         cache = dict(cache)
         cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
                                                   (0, 0, m, 0, 0))
@@ -243,8 +256,7 @@ def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
     cache, m = write_cushion_to_cache(cache, cushion)
     positions = m + jnp.arange(S)
 
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, cfg.n_layers))
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
     pre = cushion["kv"] if cushion is not None else {
         "k": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
         "v": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
@@ -282,8 +294,7 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
     scheduler: each cache slot decodes at its own offset, with RoPE, cache
     writes and attention masking all per-row (see attention_decode_kv)."""
     x = C.embed_tokens(params, token[:, None], cfg)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, cfg.n_layers))
+    lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
 
     def body(h, xs):
         lp, lsc, kvc = xs

@@ -333,7 +333,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0,
     return {"m": m, "s": s}
 
 
-def cache_roles(cfg: ModelConfig, kv_dtype=None) -> Params:
+def cache_roles(cfg: ModelConfig, kv_dtype=None,
+                per_slot_scales: bool = False) -> Params:
     """Recurrent-state sharding: batch on B, the head-dim on model.
     kv_dtype is part of the uniform signature (ModelAPI.cache_roles) and
     unused — the recurrent state is never int8."""
@@ -377,8 +378,7 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
         x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
     B = x.shape[0]
     P = n_pairs(cfg)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, P))
+    lscales = C.resolve_scales(scales, SITES, P, qcfg)
     if cushion is not None:
         init_st = _bcast_state(cushion["state"], B)
     else:
@@ -441,8 +441,7 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                 scales: Optional[Params] = None):
     x = C.embed_tokens(params, token[:, None], cfg)
     P = n_pairs(cfg)
-    lscales = ({s: scales[s] for s in SITES} if scales is not None
-               else C.placeholder_scales(SITES, P))
+    lscales = C.resolve_scales(scales, SITES, P, qcfg)
 
     def body(h, xs):
         lp, lsc, st = xs

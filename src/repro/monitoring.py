@@ -63,6 +63,26 @@ def count_compiles() -> Iterator[CompileCounter]:
         _active.remove(c)
 
 
+def resident_weight_bytes(params) -> tuple:
+    """(fp_bytes, int8_bytes) of a served parameter tree — how many bytes
+    per weight the decode loop streams from HBM. A prequantized tree
+    (core.quantization.prequantize_tree) holds its qdot-consumed matrices
+    as int8 ``w_int`` leaves (1 byte/weight vs 2-4 for bf16/fp32);
+    everything else (embeddings, norms, scales, MoE experts) counts as fp.
+    Surfaced in ``ServeStats`` and printed by launch/serve.py so the
+    fp-vs-W8A8 A/B shows its memory side, not just TTFT/TPOT."""
+    fp = i8 = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if not hasattr(leaf, "dtype"):
+            continue
+        n = int(leaf.size) * leaf.dtype.itemsize
+        if str(leaf.dtype) == "int8":
+            i8 += n
+        else:
+            fp += n
+    return fp, i8
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Continuous-batching scheduler counters (serving/scheduler.py).
@@ -73,19 +93,26 @@ class ServeStats:
     compute spent on real tokens (1.0 = perfectly packed, low values =
     the pool idles between arrivals). Retired/empty slots still run
     (compute-masked, outputs discarded) — occupancy is the serve bench's
-    measure of that waste."""
+    measure of that waste.
+
+    ``weight_bytes_fp`` / ``weight_bytes_int8`` record the resident served
+    parameter bytes by storage precision (``resident_weight_bytes``) —
+    configuration facts set at engine load, preserved across ``reset()``."""
     n_slots: int = 0
     steps: int = 0              # lock-step decode iterations
     live_slot_steps: int = 0    # sum over steps of live slots that step
     admitted: int = 0           # requests prefilled into a slot
     finished: int = 0           # requests retired (EOS or budget)
     recycles: int = 0           # admissions into a previously-used slot
+    weight_bytes_fp: int = 0    # resident fp param bytes (engine load)
+    weight_bytes_int8: int = 0  # resident int8 (prequantized) param bytes
 
     def reset(self) -> None:
-        """Zero every counter, keeping ``n_slots``. The scheduler calls this
-        at the top of each ``run()`` so a stats object shared across traces
-        in one process (serve_bench's warm-up pass, repeated bench runs)
-        never leaks occupancy counters from the previous run."""
+        """Zero every per-run counter, keeping ``n_slots`` and the resident
+        weight bytes (load-time configuration facts). The scheduler calls
+        this at the top of each ``run()`` so a stats object shared across
+        traces in one process (serve_bench's warm-up pass, repeated bench
+        runs) never leaks occupancy counters from the previous run."""
         self.steps = self.live_slot_steps = 0
         self.admitted = self.finished = self.recycles = 0
 

@@ -27,16 +27,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import QuantConfig
+from repro.core import quantization as Q
 from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
+from repro.monitoring import resident_weight_bytes
 
 
 def shard_params_for_serving(params, mesh):
     """Lay params out for inference on a tp mesh: TP-only serve rules
     (weights replicated over data/pod axes — FSDP sharding would all-gather
-    every weight per decoded token)."""
+    every weight per decoded token). Prequantized {w_int, w_scale, colsum}
+    leaves ride the same rules: w_int shards like its fp parent, colsum
+    follows the parent's output axis, scales replicate (sharding.rules_pspec)."""
     return jax.device_put(
         params, SH.params_shardings(params, mesh, SH.serve_rules()))
+
+
+def plan_quantization(api, params, qcfg: QuantConfig, cushion=None,
+                      scales=None, calib_batches=None,
+                      prequant: bool = False):
+    """Load-time quantization plan shared by ``Engine`` and
+    ``ContinuousEngine``. Returns (params, scales) ready to serve:
+
+    * ``pt_static`` with no precomputed ``scales`` calibrates them here via
+      ``core.calibration.calibrate`` over ``calib_batches`` — under the
+      cushion prefix when one is attached, because static scales must
+      describe the *deployment* activation distribution (the cushioned
+      one). Refuses to proceed with neither scales nor calibration data:
+      serving pt_static on placeholder scales silently produces garbage
+      logits, the exact failure this path exists to prevent.
+    * ``prequant`` converts every qdot-consumed weight matrix to an
+      int8-resident {w_int, w_scale, colsum} dict
+      (``core.quantization.prequantize_tree``) so decode streams
+      1 byte/weight; requires the pt_static deployment mode. The fp-weight
+      path (prequant=False) stays available as the A/B baseline.
+    """
+    if qcfg.mode == "pt_static" and scales is None:
+        if calib_batches is None:
+            raise ValueError(
+                "pt_static serving needs calibrated site scales: pass "
+                "scales= (core.calibration.calibrate) or calib_batches= "
+                "to calibrate at engine load; refusing to serve on "
+                "placeholder scales (silent garbage logits)")
+        from repro.core.calibration import calibrate
+        scales, _ = calibrate(api, params, calib_batches, qcfg,
+                              cushion=cushion)
+    if prequant:
+        if qcfg.mode != "pt_static":
+            raise ValueError(
+                f"prequant (int8-resident weights) serves the pt_static "
+                f"deployment mode only, got mode={qcfg.mode!r}")
+        params = Q.prequantize_tree(params, qcfg)
+    return params, scales
 
 
 @dataclasses.dataclass
@@ -84,6 +126,14 @@ class Engine:
     """Holds compiled prefill/decode executables for one (model, quant,
     cushion, kv_dtype) configuration.
 
+    ``calib_batches`` / ``prequant``: the load-time quantization plan
+    (``plan_quantization``). For pt_static serving, site scales are
+    calibrated here (under the cushion prefix) unless precomputed ones are
+    passed; ``prequant=True`` additionally converts qdot-consumed weights
+    to int8-resident {w_int, w_scale, colsum} dicts so decode streams
+    1 byte/weight through the W8A8 matmul path. ``weight_bytes_fp`` /
+    ``weight_bytes_int8`` report the resulting resident layout.
+
     ``mesh``: optional tp mesh (launch/mesh.py ``make_tp_mesh``). When set,
     params are laid out with the TP-only serve rules, the KV cache shards
     along its heads axis (models/*.cache_roles), and prefill/decode trace
@@ -94,11 +144,17 @@ class Engine:
 
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  cushion=None, scales=None, max_seq: int = 2048,
-                 kv_dtype=None, mesh=None):
+                 kv_dtype=None, mesh=None, calib_batches=None,
+                 prequant: bool = False):
         self.api = api
         self.mesh = mesh
+        params, scales = plan_quantization(
+            api, params, qcfg, cushion=cushion, scales=scales,
+            calib_batches=calib_batches, prequant=prequant)
         self.params = (shard_params_for_serving(params, mesh)
                        if mesh is not None else params)
+        self.weight_bytes_fp, self.weight_bytes_int8 = \
+            resident_weight_bytes(self.params)
         self.qcfg = qcfg
         self.cushion = cushion
         self.scales = scales

@@ -35,14 +35,23 @@ decode runs as one sharding-constrained jitted step with the pool resident
 across devices (the per-step host sync still reads only the (B,) sampled
 tokens, never the pool).
 
-Scope: greedy decoding over full-precision KV pools for families with a
-``CACHE_BATCH_AXES`` slot layout (dense / moe / vlm / hybrid). int8 KV
-pools are static-Engine-only for now — their per-(layer,head) dequant
-scales are calibrated from one batch's prompts, and a pool shared by
-requests admitted at different times would need per-slot scale storage.
-When every request starts together with one shared budget, prefer the
-static ``Engine``: its device-resident scan syncs twice per request
-instead of once per token.
+Quantization: the engine shares the static ``Engine``'s load-time plan
+(``serving.engine.plan_quantization``) — pt_static site scales calibrated
+under the cushion at construction, optionally with ``prequant=True``
+int8-resident weights. ``kv_dtype="int8"`` serves a quantized KV pool with
+*per-slot* dequant scales: every admission's B=1 prefill calibrates
+per-(layer,head) scales from its own prompt (``write_prompt_kv``), the
+slot scatter carries them into (L, n_slots, K) pool leaves alongside the
+KV rows, and decode quantizes/dequantizes each row with its own scales
+(kernels/flash_decode.py per-row scale routing). The fp cushion block
+kc/vc is batch-free and rewritten bit-identically on every admission
+(KVSink/IntactKV).
+
+Scope: greedy decoding over KV pools for families with a
+``CACHE_BATCH_AXES`` slot layout (dense / moe / vlm / hybrid). When every
+request starts together with one shared budget, prefer the static
+``Engine``: its device-resident scan syncs twice per request instead of
+once per token.
 """
 from __future__ import annotations
 
@@ -58,8 +67,9 @@ import numpy as np
 from repro.configs.base import QuantConfig
 from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
-from repro.monitoring import ServeStats
+from repro.monitoring import ServeStats, resident_weight_bytes
 from repro.serving.engine import (cache_seq_len, cushion_prefix_len,
+                                  plan_quantization,
                                   shard_params_for_serving)
 
 
@@ -105,9 +115,13 @@ class ContinuousEngine:
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  n_slots: int = 4, max_seq: int = 2048, cushion=None,
                  scales=None, stats: Optional[ServeStats] = None,
-                 mesh=None):
+                 mesh=None, kv_dtype=None, calib_batches=None,
+                 prequant: bool = False):
         self.api = api
         self.mesh = mesh
+        params, scales = plan_quantization(
+            api, params, qcfg, cushion=cushion, scales=scales,
+            calib_batches=calib_batches, prequant=prequant)
         self.params = (shard_params_for_serving(params, mesh)
                        if mesh is not None else params)
         self.qcfg = qcfg
@@ -115,16 +129,23 @@ class ContinuousEngine:
         self.max_seq = cache_seq_len(max_seq)
         self.cushion = cushion
         self.scales = scales
+        self.kv_dtype = kv_dtype
         self.prefix_len = cushion_prefix_len(cushion)
-        self._axes = api.cache_batch_axes   # raises for unsupported families
+        axes = dict(api.cache_batch_axes)   # raises for unsupported families
+        if kv_dtype is not None:
+            # per-slot dequant scales travel with their KV rows: the slot
+            # scatter writes the admission prefill's (L,1,K) scales into
+            # the pool's (L,n_slots,K) leaves at the same batch axis
+            axes.update({"k_scale": 1, "v_scale": 1})
+        self._axes = axes
         self.stats = stats if stats is not None else ServeStats(n_slots=n_slots)
         self.stats.n_slots = n_slots
+        self.stats.weight_bytes_fp, self.stats.weight_bytes_int8 = \
+            resident_weight_bytes(self.params)
 
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
                                         scales=scales))
-
-        axes = self._axes
 
         def admit(cache, row, slot, pos, tok, rpos, tok0):
             cache = dict(cache)
@@ -132,6 +153,13 @@ class ContinuousEngine:
                 cache[key] = jax.lax.dynamic_update_slice_in_dim(
                     cache[key], row[key].astype(cache[key].dtype), slot,
                     axis=ax)
+            for key in ("kc", "vc"):
+                # batch-free fp cushion block: rewritten wholesale from the
+                # admission row — bit-identical on every recycle, exactly
+                # the KVSink/IntactKV rule the fp pools honour via the
+                # full-row scatter
+                if key in cache:
+                    cache[key] = row[key].astype(cache[key].dtype)
             return (cache, pos.at[slot].set(jnp.asarray(rpos, jnp.int32)),
                     tok.at[slot].set(jnp.asarray(tok0, jnp.int32)))
 
@@ -156,9 +184,14 @@ class ContinuousEngine:
     # Pool state
     # ------------------------------------------------------------------
 
+    def _init_cache(self, batch: int):
+        return self.api.init_cache(batch, self.max_seq,
+                                   kv_dtype=self.kv_dtype,
+                                   prefix_len=self.prefix_len,
+                                   per_slot_scales=self.kv_dtype is not None)
+
     def _reset_pool(self) -> None:
-        self.cache = self._shard_cache(
-            self.api.init_cache(self.n_slots, self.max_seq))
+        self.cache = self._shard_cache(self._init_cache(self.n_slots))
         self.pos = jnp.zeros((self.n_slots,), jnp.int32)
         self.tok = jnp.zeros((self.n_slots,), jnp.int32)
         self.live = np.zeros((self.n_slots,), bool)
@@ -172,7 +205,9 @@ class ContinuousEngine:
         if self.mesh is None:
             return cache
         return jax.device_put(cache, SH.cache_shardings(
-            self.api.cache_roles(), cache, self.mesh))
+            self.api.cache_roles(self.kv_dtype,
+                                 per_slot_scales=self.kv_dtype is not None),
+            cache, self.mesh))
 
     def _positions_needed(self, req: Request) -> int:
         S = req.batch["tokens"].shape[1]
@@ -193,7 +228,7 @@ class ContinuousEngine:
                 f"> pool max_seq {self.max_seq}")
         tpf = time.perf_counter()
         with SH.use_mesh(self.mesh):
-            row = self._shard_cache(self.api.init_cache(1, self.max_seq))
+            row = self._shard_cache(self._init_cache(1))
             logits, row, rpos = self._prefill(self.params, req.batch, row)
             logits = logits[:, -1] if logits.ndim == 3 else logits
             tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]

@@ -102,6 +102,42 @@ def test_uniform_pos_vector_equals_scalar():
 
 
 # ---------------------------------------------------------------------------
+# Per-slot (B, K) int8 dequant scales (continuous pool calibration)
+# ---------------------------------------------------------------------------
+
+_KS_ROW = jnp.asarray(_RS.rand(_B, _K).astype(np.float32) * 0.05 + 0.01)
+_VS_ROW = jnp.asarray(_RS.rand(_B, _K).astype(np.float32) * 0.05 + 0.01)
+
+
+@pytest.mark.parametrize("pos", [[_M, -1, _SMAX - 1, _M - 1],
+                                 [3, 60, -1, 33]])
+def test_per_row_kv_scales_kernel_matches_ref(pos):
+    """(B, K) per-slot dequant scales (each slot calibrated at its own
+    admission prefill) route through the kernel's per-row scale index map
+    and match the oracle, composed with ragged per-row pos and the fp
+    cushion block."""
+    posv = jnp.asarray(pos, jnp.int32)
+    out = flash_decode(_Q, _KQ, _VQ, posv, k_scale=_KS_ROW, v_scale=_VS_ROW,
+                       kc=_KC, vc=_VC, bkv=32, interpret=True)
+    ref = R.flash_decode_ref(_Q, _KQ, _VQ, posv, k_scale=_KS_ROW,
+                             v_scale=_VS_ROW, kc=_KC, vc=_VC)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_per_row_kv_scales_uniform_equals_shared():
+    """Per-row scales with every row equal reproduce the shared-(K,) scale
+    result bit-for-bit — the static Engine's layout embeds in the pool's."""
+    rows = jnp.broadcast_to(_KS[None], (_B, _K))
+    vrows = jnp.broadcast_to(_VS[None], (_B, _K))
+    a = flash_decode(_Q, _KQ, _VQ, 41, k_scale=rows, v_scale=vrows,
+                     kc=_KC, vc=_VC, bkv=32, interpret=True)
+    b = flash_decode(_Q, _KQ, _VQ, 41, k_scale=_KS, v_scale=_VS,
+                     kc=_KC, vc=_VC, bkv=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
 # Per-row pos through every family's decode_step
 # ---------------------------------------------------------------------------
 
@@ -186,6 +222,41 @@ def test_continuous_scheduler_matches_engine(arch):
     for s in range(ce.n_slots):
         np.testing.assert_array_equal(np.asarray(ce.cache["k"][:, s, :m]),
                                       want)
+
+
+@pytest.mark.parametrize("arch", ["paper_tiny", "jamba-v0.1-52b"])
+def test_continuous_int8_kv_matches_engine(arch):
+    """int8 KV pools serve continuously with per-slot dequant scales: each
+    admission's B=1 prefill calibrates its own (layer, head) scales, the
+    slot scatter carries them into the pool, and greedy outputs are
+    token-for-token identical to the static Engine (whose B=1 int8 prefill
+    computes the very same scales) — including recycled slots, whose scale
+    rows are overwritten by the incoming request."""
+    api, params, cushion = _family_setup(arch)
+    budgets = [5, 3, 6, 4]
+    reqs = [Request(uid=i, batch=api.make_batch(jax.random.PRNGKey(100 + i),
+                                                1, 20),
+                    max_new_tokens=n)
+            for i, n in enumerate(budgets)]
+    ce = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                          cushion=cushion, kv_dtype="int8")
+    outs = ce.run(reqs)
+    assert ce.stats.recycles >= 1, "trace must exercise slot recycling"
+    assert ce.cache["k"].dtype == jnp.int8
+    assert ce.cache["k_scale"].shape[1] == ce.n_slots, \
+        "int8 pool must hold per-slot scales"
+
+    eng = Engine(api, params, QN, cushion=cushion, max_seq=128,
+                 kv_dtype="int8")
+    for req, out in zip(reqs, outs):
+        ref = eng.generate(req.batch, req.max_new_tokens).tokens[0]
+        np.testing.assert_array_equal(out.tokens, ref)
+
+    # protected fp cushion block bit-identical after recycling
+    want = cushion["kv"]["k"].astype(ce.cache["kc"].dtype)
+    np.testing.assert_array_equal(
+        np.asarray(ce.cache["kc"].astype(jnp.float32)),
+        np.asarray(want.astype(jnp.float32)))
 
 
 def test_eos_retires_request_early():

@@ -286,6 +286,95 @@ def test_continuous_engine_tp_parity():
 
 
 # ---------------------------------------------------------------------------
+# Prequantized (int8-resident) serving under the mesh
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _w8a8_setup():
+    from repro.core.calibration import calibrate
+    api, params, cushion = setup("paper_tiny")
+    qw8 = QuantConfig(mode="pt_static", true_int8=True)
+    cal = tuple(api.make_batch(jax.random.PRNGKey(100 + i), 2, 32)
+                for i in range(2))
+    scales, _ = calibrate(api, params, list(cal), qw8, cushion=cushion)
+    return api, params, cushion, qw8, scales
+
+
+@need_devices(2)
+def test_tp_prequant_generation_parity():
+    """Calibrated pt_static serving with int8-resident weights shards:
+    tp=2 generation is token-for-token identical to the unsharded
+    prequantized engine AND to the unsharded fp-weight true-int8 path —
+    the {w_int, w_scale, colsum} leaves lay out under the serve rules
+    (w_int like its fp parent, colsum on the output axis, scales
+    replicated) without perturbing a single logit argmax."""
+    api, params, cushion, qw8, scales = _w8a8_setup()
+    batch = api.make_batch(jax.random.PRNGKey(7), 2, 24)
+    ref_fpw = Engine(api, params, qw8, cushion=cushion, scales=scales,
+                     max_seq=128)
+    ref_pq = Engine(api, params, qw8, cushion=cushion, scales=scales,
+                    max_seq=128, prequant=True)
+    tp_pq = Engine(api, params, qw8, cushion=cushion, scales=scales,
+                   max_seq=128, prequant=True, mesh=make_tp_mesh(2))
+    r = ref_pq.generate(batch, 10)
+    np.testing.assert_array_equal(r.tokens,
+                                  ref_fpw.generate(batch, 10).tokens)
+    np.testing.assert_array_equal(tp_pq.generate(batch, 10).tokens,
+                                  r.tokens)
+    # int8 weights actually sharded: each shard holds half the columns
+    w = tp_pq.params["layers"]["attn"]["wqkv"]
+    assert w["w_int"].dtype == jnp.int8
+    shard = next(iter(w["w_int"].addressable_shards))
+    assert shard.data.shape[-1] == w["w_int"].shape[-1] // 2
+    cshard = next(iter(w["colsum"].addressable_shards))
+    assert cshard.data.shape[-1] == w["colsum"].shape[-1] // 2
+
+
+@need_devices(2)
+def test_tp_continuous_int8_per_slot_scales_parity():
+    """The int8 continuous pool (per-slot dequant scales calibrated at each
+    admission prefill) serves sharded with the unsharded pool's tokens;
+    the per-slot scale leaves shard along heads with batch replicated."""
+    api, params, cushion = setup("paper_tiny")
+    reqs = [Request(uid=i,
+                    batch=api.make_batch(jax.random.PRNGKey(100 + i), 1,
+                                         (20, 26)[i % 2]),
+                    max_new_tokens=n)
+            for i, n in enumerate([5, 3, 6, 4])]
+    ref = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                           cushion=cushion, kv_dtype="int8").run(reqs)
+    ce = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                          cushion=cushion, kv_dtype="int8",
+                          mesh=make_tp_mesh(2))
+    outs = ce.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert ce.stats.recycles >= 1
+    assert ce.cache["k_scale"].shape == \
+        (api.cfg.n_layers, ce.n_slots, api.cfg.n_kv_heads)
+
+
+def test_prequantized_param_specs_follow_parent_rules():
+    """Sharding-rule units for prequantized leaves (single-device: specs
+    are computed, not executed): w_int inherits its fp parent's serve
+    rules, colsum follows the parent's OUTPUT axis, w_scale replicates."""
+    from repro.core import quantization as Q
+    from repro.distributed.sharding import params_shardings, serve_rules
+    api, params, _ = setup("paper_tiny")
+    pq = Q.prequantize_tree(params, QuantConfig(mode="pt_static",
+                                                true_int8=True))
+    sh = params_shardings(pq, make_tp_mesh(1), serve_rules())
+    wqkv = sh["layers"]["attn"]["wqkv"]
+    assert wqkv["w_int"].spec == jax.sharding.PartitionSpec(None, None, "tp")
+    assert wqkv["colsum"].spec == jax.sharding.PartitionSpec(None, "tp")
+    assert wqkv["w_scale"].spec == jax.sharding.PartitionSpec()
+    wo = sh["layers"]["attn"]["wo"]
+    assert wo["w_int"].spec == jax.sharding.PartitionSpec(None, "tp", None)
+    assert wo["colsum"].spec == jax.sharding.PartitionSpec(None, None), \
+        "wo's output axis is d_model (unsharded at serve): colsum replicates"
+
+
+# ---------------------------------------------------------------------------
 # Compile-once + device-resident pool under the mesh
 # ---------------------------------------------------------------------------
 
