@@ -383,11 +383,102 @@ def w8a8_bench():
             "fp-weight pt_static path (parity oracle failed)")
 
 
+def router_bench(replicas: int = 2):
+    """Fault-tolerant replica-router bench: one Poisson trace through
+    ``ReplicaRouter`` twice — a no-fault run, then the same trace with a
+    deterministic chaos kill of one replica mid-trace
+    (``crash@replica1.step``). The parity gate asserts the chaos run
+    completes every request with greedy tokens token-for-token identical
+    to the no-fault run (the cushion prefix is replicated bit-identically
+    on every replica, and greedy decode is batch-composition independent,
+    so failover retries are exact); retries/failovers/deaths must be
+    visible in RouterStats. Emits CSV rows and the checked-in
+    ``results/BENCH_router.json`` artifact with p50/p99 latency and TTFT
+    for both runs."""
+    import json
+    import os
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.configs import QuantConfig, get_config
+    from repro.distributed.fault_injection import FailPoint, FaultInjector
+    from repro.launch.serve import poisson_trace
+    from repro.models.registry import build
+    from repro.serving.router import ReplicaRouter, RouterConfig
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(mode="none")
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2, 3], jnp.int32),
+                                  None, qcfg)
+    n_slots, n_requests, rate = 4, 16, 60.0
+    reqs = poisson_trace(api, 0, n_requests, rate,
+                         prompt_lens=(48, 64), budgets=(32, 24))
+    router = ReplicaRouter(api, params, qcfg, n_replicas=replicas,
+                           cfg=RouterConfig(max_queue=n_requests),
+                           cushion=cushion, n_slots=n_slots,
+                           max_seq=64 + 32 + 32)
+
+    router.run(reqs)                    # warm/compile pass
+    base = router.run(reqs)             # no-fault measured run
+    kill = FaultInjector([FailPoint(site="replica1.step", kind="crash",
+                                    at_step=6)])
+    chaos = router.run(reqs, injector=kill)
+
+    def _pcts(res):
+        lat = np.asarray([o.latency_s for o in res.outputs])
+        ttft = np.asarray([o.ttft_ms for o in res.outputs])
+        return {"p50_latency_s": float(np.percentile(lat, 50)),
+                "p99_latency_s": float(np.percentile(lat, 99)),
+                "p50_ttft_ms": float(np.percentile(ttft, 50)),
+                "p99_ttft_ms": float(np.percentile(ttft, 99))}
+
+    want = {o.uid: o.tokens for o in base.outputs}
+    match = (len(base.outputs) == n_requests == len(chaos.outputs)
+             and not base.rejected and not chaos.rejected
+             and all(np.array_equal(o.tokens, want[o.uid])
+                     for o in chaos.outputs))
+    cs = chaos.stats
+    fault_visible = (cs.replica_deaths == 1 and cs.failovers >= 1
+                     and cs.retries >= 1)
+    bp, cp = _pcts(base), _pcts(chaos)
+    emit("router_nofault_p50_latency", bp["p50_latency_s"] * 1e6,
+         f"{replicas} replicas x {n_slots} slots")
+    emit("router_chaos_p50_latency", cp["p50_latency_s"] * 1e6,
+         f"kill replica1 mid-trace; deaths={cs.replica_deaths} "
+         f"failovers={cs.failovers} retries={cs.retries}")
+    emit("router_parity", float(match) * 1e6,
+         "chaos tokens == no-fault tokens for every request")
+
+    point = {"model": cfg.name, "replicas": replicas, "n_slots": n_slots,
+             "n_requests": n_requests, "rate_req_s": rate,
+             "parity_match": match, "fault_visible": fault_visible,
+             "nofault": {**bp, **base.stats.as_dict()},
+             "chaos": {"kill": "crash@replica1.step:6", **cp,
+                       **cs.as_dict()}}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_router.json"), "w") as f:
+        json.dump({"bench": "router", "points": [point]}, f, indent=1)
+    if not match:
+        raise SystemExit("chaos run diverged from no-fault run "
+                         "(router failover parity oracle failed)")
+    if not fault_visible:
+        raise SystemExit(
+            f"injected kill left no trace in RouterStats: deaths="
+            f"{cs.replica_deaths} failovers={cs.failovers} "
+            f"retries={cs.retries}")
+
+
 EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
                  "decode_bench": decode_bench,
                  "search_bench": search_bench,
                  "serve_bench": serve_bench,
-                 "w8a8_bench": w8a8_bench}
+                 "w8a8_bench": w8a8_bench,
+                 "router_bench": router_bench}
 
 
 def main() -> None:
@@ -400,6 +491,9 @@ def main() -> None:
                     help="serve_bench only: tensor-parallel width (forces "
                          "that many XLA host devices on CPU; emits "
                          "results/BENCH_tp.json instead of BENCH_serve.json)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="router_bench only: replica count behind the "
+                         "fault-tolerant router")
     args = ap.parse_args()
 
     # must land before the lazy `import jax` inside the bench fns
@@ -408,7 +502,11 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if args.only in EXTRA_BENCHES:
-        kw = {"tp": args.tp} if args.only == "serve_bench" else {}
+        kw = {}
+        if args.only == "serve_bench":
+            kw = {"tp": args.tp}
+        elif args.only == "router_bench":
+            kw = {"replicas": args.replicas}
         EXTRA_BENCHES[args.only](**kw)
         return
     kernel_microbench()

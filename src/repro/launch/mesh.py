@@ -52,3 +52,21 @@ def make_tp_mesh(tp: int, data: int = 1) -> Mesh:
             f"--xla_force_host_platform_device_count={n} before importing "
             "jax to emulate a multi-device host.")
     return Mesh(np.asarray(devices[:n]).reshape(data, tp), ("data", "tp"))
+
+
+def make_replica_meshes(n: int, tp: int = 1) -> list:
+    """Data-parallel replica meshes for the serving router: partition the
+    first ``n * tp`` devices into ``n`` disjoint ``(data=1, tp)`` meshes,
+    one per ``ReplicaRouter`` replica. Each replica's ContinuousEngine runs
+    its own independent device program on its own group — replica isolation
+    is what makes killing one replica survivable, so replicas deliberately
+    do NOT share a mesh axis."""
+    devices = jax.devices()
+    if len(devices) < n * tp:
+        raise RuntimeError(
+            f"need {n * tp} devices for {n} replicas x tp={tp}; have "
+            f"{len(devices)}. On CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n * tp} before "
+            "importing jax to emulate a multi-device host.")
+    return [Mesh(np.asarray(devices[i * tp:(i + 1) * tp]).reshape(1, tp),
+                 ("data", "tp")) for i in range(n)]

@@ -23,7 +23,25 @@ requests arrive at --rate req/s, are admitted into a pool of --slots cache
 slots as they free up, and decode in lock-step with per-slot positions.
 Prints per-request TTFT/TPOT plus aggregate tokens/s, latency percentiles
 and slot occupancy. --bench-json PATH appends a trajectory point for perf
-regression tracking in either mode.
+regression tracking in either mode. The trace is fully seedable:
+--trace-seed (default --seed) fixes arrivals, prompts and budgets, so two
+runs with the same seeds replay the identical workload.
+
+--replicas N serves the trace through the fault-tolerant replica router
+(``serving.router.ReplicaRouter``): N data-parallel ContinuousEngine
+replicas behind one bounded admission queue with least-loaded dispatch,
+health tracking, retry/failover and graceful drain. --chaos injects
+deterministic faults (``kind@site:step`` specs, e.g.
+``crash@replica1.step:12`` — see distributed/fault_injection.py) to
+exercise failover on a live trace:
+
+    python -m repro.launch.serve --arch paper_tiny --smoke \
+        --mode continuous --replicas 3 --chaos crash@replica1.step:6
+
+Graceful shutdown (continuous + router modes): SIGTERM and ctrl-C drain
+instead of dying mid-step — admission stops, live slots decode to
+completion, and the final ServeStats/RouterStats are printed for the
+completed prefix of the trace.
 """
 from __future__ import annotations
 
@@ -33,20 +51,24 @@ import os
 import sys
 
 
-def _force_host_devices_for_tp() -> None:
-    """--tp N on CPU needs N XLA host devices, and the flag only takes
-    effect before jax initializes — sniff argv at import time (same pattern
-    as launch/dryrun.py)."""
-    from repro.flags import force_host_device_count
+def _sniff_int_arg(name: str) -> int:
     try:
-        if "--tp" in sys.argv:
-            tp = int(sys.argv[sys.argv.index("--tp") + 1])
-        else:       # argparse also accepts the --tp=N form
-            tp = next(int(a.split("=", 1)[1]) for a in sys.argv
-                      if a.startswith("--tp="))
+        if name in sys.argv:
+            return int(sys.argv[sys.argv.index(name) + 1])
+        return next(int(a.split("=", 1)[1]) for a in sys.argv
+                    if a.startswith(name + "="))
     except (IndexError, ValueError, StopIteration):
-        return
-    force_host_device_count(tp)
+        return 1
+
+
+def _force_host_devices_for_tp() -> None:
+    """--tp N (x --replicas R) on CPU needs N*R XLA host devices, and the
+    flag only takes effect before jax initializes — sniff argv at import
+    time (same pattern as launch/dryrun.py)."""
+    from repro.flags import force_host_device_count
+    n = _sniff_int_arg("--tp") * _sniff_int_arg("--replicas")
+    if n > 1:
+        force_host_device_count(n)
 
 
 _force_host_devices_for_tp()
@@ -67,7 +89,10 @@ def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
                   prompt_lens, budgets) -> list:
     """Poisson-arrival request trace: exponential inter-arrival gaps at
     ``rate`` req/s, prompts cycling through ``prompt_lens`` (total
-    positions) and budgets through ``budgets``."""
+    positions) and budgets through ``budgets``. Fully seedable: everything
+    — arrival gaps, prompt contents, budget assignment — derives from
+    ``rng_seed``, so the same seed replays the identical workload (the
+    chaos parity checks depend on this)."""
     rs = np.random.RandomState(rng_seed)
     t = 0.0
     reqs = []
@@ -82,9 +107,26 @@ def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
     return reqs
 
 
+def install_sigterm_drain() -> None:
+    """Map SIGTERM onto KeyboardInterrupt so orchestrator shutdowns take
+    the same graceful-drain path as ctrl-C: stop admitting, decode live
+    slots to completion, print final stats. No-op off the main thread
+    (pytest workers)."""
+    import signal
+
+    def _handler(signum, frame):
+        raise KeyboardInterrupt("SIGTERM")
+
+    try:
+        signal.signal(signal.SIGTERM, _handler)
+    except ValueError:      # not the main thread
+        pass
+
+
 def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
                    calib_batches=None):
-    reqs = poisson_trace(api, args.seed, args.n_requests, args.rate,
+    install_sigterm_drain()
+    reqs = poisson_trace(api, args.trace_seed, args.n_requests, args.rate,
                          prompt_lens=(args.prompt_len, args.prompt_len + 8),
                          budgets=(args.tokens, max(1, args.tokens // 2)))
     eng = ContinuousEngine(api, params, qcfg, n_slots=args.slots,
@@ -100,15 +142,22 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
     if bench_path:
         eng.run(reqs)           # warm/compile pass; measure steady state
     outs = eng.run(reqs)
+    for o in outs:
+        print(f"[serve]   req {o.uid}: slot {o.slot} n={len(o.tokens)} "
+              f"TTFT={o.ttft_ms:.1f}ms TPOT={o.tpot_ms:.2f}ms "
+              f"latency={o.latency_s * 1e3:.0f}ms")
+    if eng.stats.interrupted:
+        print(f"[serve] DRAINED: interrupted after {len(outs)} of "
+              f"{len(reqs)} requests; live slots completed, queued "
+              f"remainder dropped")
+    print(f"[serve] final stats: {eng.stats.as_dict()}")
+    if not outs:
+        return outs
     total = sum(len(o.tokens) for o in outs)
     span = max(o.finished_s for o in outs) - min(r.arrival_s for r in reqs)
     lat = np.asarray([o.latency_s for o in outs])
     tps = total / max(span, 1e-9)
     occ = eng.stats.occupancy()
-    for o in outs:
-        print(f"[serve]   req {o.uid}: slot {o.slot} n={len(o.tokens)} "
-              f"TTFT={o.ttft_ms:.1f}ms TPOT={o.tpot_ms:.2f}ms "
-              f"latency={o.latency_s * 1e3:.0f}ms")
     print(f"[serve] continuous: {len(outs)} reqs, {total} tokens, "
           f"{tps:.1f} tok/s, p50={np.percentile(lat, 50) * 1e3:.0f}ms "
           f"p99={np.percentile(lat, 99) * 1e3:.0f}ms occupancy={occ:.2f}")
@@ -123,6 +172,65 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
                  "occupancy": occ, **eng.stats.as_dict()}
         _append_point(bench_path, point)
     return outs
+
+
+def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None):
+    """--replicas N: the trace goes through the fault-tolerant replica
+    router instead of a single engine. --chaos arms deterministic fault
+    injection; rejections, retries, failovers and per-replica health land
+    in the printed RouterStats."""
+    from repro.distributed.fault_injection import FaultInjector
+    from repro.serving.router import ReplicaRouter, RouterConfig
+
+    install_sigterm_drain()
+    meshes = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_replica_meshes
+        meshes = make_replica_meshes(args.replicas, args.tp)
+        print(f"[serve] {args.replicas} replicas x tp={args.tp} on disjoint "
+              f"device groups")
+    injector = None
+    if args.chaos:
+        injector = FaultInjector.parse(args.chaos, seed=args.chaos_seed)
+        print(f"[serve] chaos armed: {args.chaos} (seed {args.chaos_seed})")
+    reqs = poisson_trace(api, args.trace_seed, args.n_requests, args.rate,
+                         prompt_lens=(args.prompt_len, args.prompt_len + 8),
+                         budgets=(args.tokens, max(1, args.tokens // 2)))
+    router = ReplicaRouter(
+        api, params, qcfg, n_replicas=args.replicas,
+        cfg=RouterConfig(max_queue=args.max_queue), meshes=meshes,
+        n_slots=args.slots, max_seq=args.prompt_len + 8 + args.tokens + 32,
+        kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
+        calib_batches=calib_batches, prequant=args.prequant)
+    res = router.run(reqs, injector=injector)
+    for o in res.outputs:
+        retry = f" attempts={o.attempts}" if o.attempts > 1 else ""
+        print(f"[serve]   req {o.uid}: replica {o.replica} slot {o.slot} "
+              f"n={len(o.tokens)} TTFT={o.ttft_ms:.1f}ms "
+              f"TPOT={o.tpot_ms:.2f}ms "
+              f"latency={o.latency_s * 1e3:.0f}ms{retry}")
+    for r in res.rejected:
+        print(f"[serve]   req {r.uid}: REJECTED ({r.reason})")
+    st = res.stats
+    print(f"[serve] router: {st.completed}/{st.submitted} completed, "
+          f"{st.rejected} rejected, {st.retries} retries, "
+          f"{st.failovers} failovers, {st.replica_deaths} deaths, "
+          f"queue peak {st.queue_depth_peak}, states "
+          f"{[p['state'] for p in st.per_replica]}")
+    if st.drained:
+        print("[serve] DRAINED: graceful shutdown completed the live slots")
+    if res.outputs:
+        lat = np.asarray([o.latency_s for o in res.outputs])
+        print(f"[serve] p50={np.percentile(lat, 50) * 1e3:.0f}ms "
+              f"p99={np.percentile(lat, 99) * 1e3:.0f}ms")
+    print(f"[serve] final stats: {st.as_dict()}")
+    if bench_path:
+        _append_point(bench_path, {
+            "mode": "router", "arch": args.arch, "quant": args.quant,
+            "replicas": args.replicas, "chaos": args.chaos or "",
+            "slots": args.slots, "rate": args.rate,
+            "n_requests": args.n_requests, **st.as_dict()})
+    return res
 
 
 def _append_point(path: str, point: dict) -> None:
@@ -159,6 +267,24 @@ def main(argv=None):
                     help="continuous mode: Poisson arrival rate (req/s)")
     ap.add_argument("--n-requests", type=int, default=8,
                     help="continuous mode: trace length")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous mode: serve through the replica "
+                         "router over N data-parallel engine replicas "
+                         "(health checks, retries, backpressure, drain)")
+    ap.add_argument("--chaos", default=None,
+                    help="router mode: comma-separated fault specs "
+                         "kind@site:step[:stall_s], e.g. "
+                         "crash@replica1.step:12 (kinds: crash, stall, "
+                         "heartbeat, interrupt)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for randomized fault schedules")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="router mode: bounded admission queue size "
+                         "(overflow -> explicit queue_full rejection)")
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="seed for the Poisson trace (arrivals, prompts, "
+                         "budgets); defaults to --seed. Same seed = "
+                         "identical workload replay")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from latest checkpoint")
     ap.add_argument("--seed", type=int, default=0)
@@ -187,6 +313,11 @@ def main(argv=None):
     if args.prequant and args.quant != "pt_static":
         ap.error("--prequant requires --quant pt_static (int8-resident "
                  "weights serve the per-tensor static deployment path)")
+    if (args.replicas > 1 or args.chaos) and args.mode != "continuous":
+        ap.error("--replicas/--chaos require --mode continuous (the "
+                 "router fronts ContinuousEngine replicas)")
+    if args.trace_seed is None:
+        args.trace_seed = args.seed
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -226,6 +357,10 @@ def main(argv=None):
               f"{len(calib)} batches at engine load")
 
     if args.mode == "continuous":
+        if args.replicas > 1 or args.chaos:
+            return run_router(api, params, qcfg, args,
+                              bench_path=args.bench_json,
+                              calib_batches=calib)
         return run_continuous(api, params, qcfg, args,
                               bench_path=args.bench_json, mesh=mesh,
                               calib_batches=calib)

@@ -31,6 +31,13 @@ DEC_SITES = ("qkv", "o", "xq", "xo", "mlp_in", "down")
 # `cushioncache.greedy_search_ref` (full forward per candidate).
 SUPPORTS_PREFIX_KV_SCORING = False
 
+# Continuous-batching slot layout: decoder self-attention KV plus the
+# precomputed cross-attention KV all live at (L, B, S/T_enc, K, hd) —
+# batch axis 1 everywhere. Scattering xk/xv with the row carries each
+# request's *own* encoder states into its slot, so slots transcribing
+# different audio decode together in one lock-step batch.
+CACHE_BATCH_AXES = {"k": 1, "v": 1, "xk": 1, "xv": 1}
+
 
 def xattn_init(key, cfg: ModelConfig) -> Params:
     hd, H, K = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads

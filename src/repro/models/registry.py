@@ -107,9 +107,11 @@ class ModelAPI:
     @property
     def cache_batch_axes(self) -> Dict[str, int]:
         """Batch axis of every per-request cache leaf — the continuous-
-        batching scheduler's slot-scatter map. Families without it (ssm's
-        shape-polymorphic state, encdec's cross-attention frames) serve via
-        the static Engine only."""
+        batching scheduler's slot-scatter map. Entries may be nested dicts
+        (per-leaf axes for state trees — ssm's stacked mLSTM/sLSTM states).
+        Every registry family defines one: dense/moe/vlm (flat KV), hybrid
+        (KV + Mamba state), ssm (recurrent state tree), encdec (self- +
+        cross-attention KV)."""
         axes = getattr(self.mod, "CACHE_BATCH_AXES", None)
         if axes is None:
             raise NotImplementedError(

@@ -36,6 +36,16 @@ SITES = ("m_in", "m_out", "s_in", "s_out")
 # (full forward per candidate, one recompile per appended token).
 SUPPORTS_PREFIX_KV_SCORING = False
 
+# Continuous-batching slot layout. The cache is a state *tree* (stacked
+# mLSTM/sLSTM states per pair), so the entries are nested per-leaf batch
+# axes: every leaf is (P, B, ...) after the pair-vmap — batch on axis 1
+# throughout. The recurrence ignores the scheduler's per-row pos vector
+# (O(1) state, no positions), and dead pool rows advancing garbage state is
+# harmless: admission scatters the full per-request row before the slot is
+# read again.
+CACHE_BATCH_AXES = {"m": {"C": 1, "n": 1, "m": 1},
+                    "s": {"c": 1, "n": 1, "h": 1, "m": 1}}
+
 
 def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
     inner = cfg.ssm.expand * cfg.d_model if cfg.ssm else 2 * cfg.d_model

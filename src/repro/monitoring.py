@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Iterator, List
+from typing import Dict, Iterator, List
 
 import jax
 
@@ -97,13 +97,20 @@ class ServeStats:
 
     ``weight_bytes_fp`` / ``weight_bytes_int8`` record the resident served
     parameter bytes by storage precision (``resident_weight_bytes``) —
-    configuration facts set at engine load, preserved across ``reset()``."""
+    configuration facts set at engine load, preserved across ``reset()``.
+
+    ``canceled`` counts live slots freed without a result (deadline expiry
+    mid-decode, router failover bookkeeping); ``interrupted`` records that
+    the run ended via the graceful-drain path (ctrl-C / SIGTERM) rather
+    than trace exhaustion."""
     n_slots: int = 0
     steps: int = 0              # lock-step decode iterations
     live_slot_steps: int = 0    # sum over steps of live slots that step
     admitted: int = 0           # requests prefilled into a slot
     finished: int = 0           # requests retired (EOS or budget)
     recycles: int = 0           # admissions into a previously-used slot
+    canceled: int = 0           # live slots freed without a result
+    interrupted: bool = False   # run ended by graceful drain
     weight_bytes_fp: int = 0    # resident fp param bytes (engine load)
     weight_bytes_int8: int = 0  # resident int8 (prequantized) param bytes
 
@@ -114,10 +121,52 @@ class ServeStats:
         traces in one process (serve_bench's warm-up pass, repeated bench
         runs) never leaks occupancy counters from the previous run."""
         self.steps = self.live_slot_steps = 0
-        self.admitted = self.finished = self.recycles = 0
+        self.admitted = self.finished = self.recycles = self.canceled = 0
+        self.interrupted = False
 
     def occupancy(self) -> float:
         return self.live_slot_steps / max(1, self.steps * self.n_slots)
 
     def as_dict(self) -> dict:
         return {**dataclasses.asdict(self), "occupancy": self.occupancy()}
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Replica-router counters (serving/router.py).
+
+    ``retries`` counts re-enqueues of a request after a failed attempt
+    (admission error, replica crash); ``failovers`` counts requests moved
+    off a dying replica specifically. ``rejections`` buckets explicit
+    backpressure/deadline rejections by reason string. ``queue_depth_peak``
+    is the high-water mark of the bounded admission queue — the
+    backpressure signal. ``per_replica`` snapshots each replica's
+    ``ServeStats`` (and health state) at collection time."""
+    n_replicas: int = 0
+    submitted: int = 0          # requests accepted into the admission queue
+    completed: int = 0          # requests finished with a result
+    retries: int = 0            # re-enqueues after a failed attempt
+    failovers: int = 0          # live requests moved off a dying replica
+    replica_deaths: int = 0     # replicas transitioned to DEAD
+    queue_depth_peak: int = 0   # admission-queue high-water mark
+    drained: bool = False       # run ended via graceful drain
+    rejections: Dict[str, int] = dataclasses.field(default_factory=dict)
+    per_replica: List[dict] = dataclasses.field(default_factory=list)
+
+    def reject(self, reason: str) -> None:
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
+
+    @property
+    def rejected(self) -> int:
+        return sum(self.rejections.values())
+
+    def reset(self) -> None:
+        self.submitted = self.completed = 0
+        self.retries = self.failovers = self.replica_deaths = 0
+        self.queue_depth_peak = 0
+        self.drained = False
+        self.rejections = {}
+        self.per_replica = []
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "rejected": self.rejected}

@@ -1,7 +1,13 @@
-"""repro.serving — static-batch Engine and the continuous-batching
-scheduler (ContinuousEngine: slot pool, per-row decode positions)."""
+"""repro.serving — static-batch Engine, the continuous-batching scheduler
+(ContinuousEngine: slot pool, per-row decode positions) and the
+fault-tolerant multi-replica front-end (ReplicaRouter: health-tracked
+replicas, bounded admission queue, retry/failover, graceful drain)."""
 from repro.serving.engine import Engine, GenerationResult, bucket_steps
+from repro.serving.router import (AllReplicasDead, Rejected, ReplicaRouter,
+                                  RoutedOutput, RouterConfig, RouterResult)
 from repro.serving.scheduler import ContinuousEngine, Request, RequestOutput
 
 __all__ = ["Engine", "GenerationResult", "bucket_steps",
-           "ContinuousEngine", "Request", "RequestOutput"]
+           "ContinuousEngine", "Request", "RequestOutput",
+           "ReplicaRouter", "RouterConfig", "RouterResult", "RoutedOutput",
+           "Rejected", "AllReplicasDead"]

@@ -17,15 +17,32 @@ Design
   block [0:m) bit-identically on every recycle (KVSink/IntactKV: the fp
   sink block is never evicted and never inherited stale from the previous
   occupant) and leaves any stale content KV beyond the new request's
-  extent masked off by the slot's own ``pos``.
+  extent masked off by the slot's own ``pos``. Axes entries may be nested
+  dicts (a per-leaf batch-axis subtree) for families whose cache is a
+  state *tree* rather than flat arrays — ssm's per-pair mLSTM/sLSTM
+  states scatter exactly like hybrid's Mamba leaves.
 * Per-row positions are threaded down to the attention kernel: RoPE
   offsets, cache writes and masking are all per-slot
   (``common.attention_decode_kv`` / ``kernels/flash_decode.py``), so slots
   prefilled at different times decode together in one lock-step batch.
+  Recurrent families (ssm, hybrid's Mamba leaves) ignore ``pos``; their
+  dead rows advance garbage state that the full-row admission scatter
+  overwrites before the slot is ever read again.
 * EOS/budget retirement happens host-side on the one per-step sync that
   reads the sampled tokens; the freed slot is recycled by the next
   admission. TTFT/TPOT are tracked per request; pool occupancy lands in
   ``monitoring.ServeStats``.
+
+Incremental API (the replica router's contract, serving/router.py):
+``start()`` resets the pool and opens a serving session; ``try_admit(req)``
+admits into a free slot (False when the pool is full — the caller owns
+queueing/backpressure); ``step()`` runs one lock-step decode and retires
+finished slots; ``cancel(uid)`` frees a live slot without a result
+(deadline expiry / failover); ``pop_finished()`` drains completed outputs.
+``run(trace)`` — the single-engine trace replay — is built entirely on
+these hooks, and drains gracefully on ``KeyboardInterrupt``: admission
+stops, live slots decode to completion, and partial results are returned
+with ``stats.interrupted`` set.
 
 Tensor parallelism: pass a ``mesh`` (launch/mesh.py ``make_tp_mesh``) and
 the pool shards along the family's ``cache_roles`` axes (KV heads, Mamba
@@ -47,11 +64,11 @@ KV rows, and decode quantizes/dequantizes each row with its own scales
 kc/vc is batch-free and rewritten bit-identically on every admission
 (KVSink/IntactKV).
 
-Scope: greedy decoding over KV pools for families with a
-``CACHE_BATCH_AXES`` slot layout (dense / moe / vlm / hybrid). When every
-request starts together with one shared budget, prefer the static
-``Engine``: its device-resident scan syncs twice per request instead of
-once per token.
+Scope: greedy decoding for every registry family with a
+``CACHE_BATCH_AXES`` slot layout — dense / moe / vlm / hybrid (KV pools,
+int8-capable) plus ssm and encdec (fp state/KV pools). When every request
+starts together with one shared budget, prefer the static ``Engine``: its
+device-resident scan syncs twice per request instead of once per token.
 """
 from __future__ import annotations
 
@@ -77,12 +94,16 @@ from repro.serving.engine import (cache_seq_len, cushion_prefix_len,
 class Request:
     """One generation request. batch: B=1 model inputs ({"tokens": (1, S)}
     plus "patches"/"frames" where the family needs them). arrival_s is the
-    trace-relative arrival time (0.0 = available immediately)."""
+    trace-relative arrival time (0.0 = available immediately).
+    deadline_s, when set, is the trace-relative instant after which the
+    request is worthless — the router rejects it from the queue or cancels
+    it mid-decode once the deadline passes."""
     uid: int
     batch: Dict[str, Any]
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -106,6 +127,17 @@ class _Slot:
         self.t_first = 0.0
         self.t_admit = 0.0
         self.used = False       # has ever held a request (recycle counter)
+
+
+def _scatter_row(dst, src, spec, slot):
+    """Write a B=1 admission row into pool slot ``slot``. ``spec`` is the
+    family's batch-axis entry: an int (flat cache leaf) or a nested dict
+    of per-leaf axes (state trees — ssm's stacked mLSTM/sLSTM states)."""
+    if isinstance(spec, dict):
+        return {k: (_scatter_row(dst[k], src[k], spec[k], slot)
+                    if k in spec else dst[k]) for k in dst}
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), slot, axis=spec)
 
 
 class ContinuousEngine:
@@ -132,6 +164,9 @@ class ContinuousEngine:
         self.kv_dtype = kv_dtype
         self.prefix_len = cushion_prefix_len(cushion)
         axes = dict(api.cache_batch_axes)   # raises for unsupported families
+        # recurrent-only caches (ssm) have no sequence axis: the pool never
+        # runs out of positions, so the max_seq admission check is vacuous
+        self._seq_cache = any(k in axes for k in ("k", "v"))
         if kv_dtype is not None:
             # per-slot dequant scales travel with their KV rows: the slot
             # scatter writes the admission prefill's (L,1,K) scales into
@@ -150,9 +185,7 @@ class ContinuousEngine:
         def admit(cache, row, slot, pos, tok, rpos, tok0):
             cache = dict(cache)
             for key, ax in axes.items():
-                cache[key] = jax.lax.dynamic_update_slice_in_dim(
-                    cache[key], row[key].astype(cache[key].dtype), slot,
-                    axis=ax)
+                cache[key] = _scatter_row(cache[key], row[key], ax, slot)
             for key in ("kc", "vc"):
                 # batch-free fp cushion block: rewritten wholesale from the
                 # admission row — bit-identical on every recycle, exactly
@@ -177,8 +210,7 @@ class ContinuousEngine:
         # Backends that can't donate (CPU) just ignore the hint.
         self._admit = jax.jit(admit, donate_argnums=(0,))
         self._step = jax.jit(step, donate_argnums=(4,))
-        with SH.use_mesh(self.mesh):
-            self._reset_pool()
+        self.start()
 
     # ------------------------------------------------------------------
     # Pool state
@@ -216,12 +248,100 @@ class ContinuousEngine:
         return self.prefix_len + S + req.max_new_tokens
 
     # ------------------------------------------------------------------
-    # Admission / retirement
+    # Incremental serving API (the replica router's contract)
     # ------------------------------------------------------------------
 
-    def _admit_request(self, req: Request, slot: int, t0: float) -> None:
+    def start(self) -> None:
+        """Open a serving session: reset the pool, the occupancy stats and
+        the result buffers. Compiled executables are kept."""
+        with SH.use_mesh(self.mesh):
+            self._reset_pool()
+        self.stats.reset()
+        self._results: Dict[int, RequestOutput] = {}
+        self._ttft: Dict[int, float] = {}
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        """Seconds since ``start()`` (the session-relative clock every
+        timestamp in ``RequestOutput`` is expressed in)."""
+        return time.perf_counter() - self._t0
+
+    def free_slots(self) -> List[int]:
+        return [int(i) for i in np.flatnonzero(~self.live)
+                if self._slots[i].req is None]
+
+    @property
+    def live_count(self) -> int:
+        return int(self.live.sum())
+
+    def live_requests(self) -> List[Request]:
+        """Requests currently occupying a slot (the router fails these over
+        to surviving replicas when this engine dies)."""
+        return [s.req for s in self._slots if s.req is not None]
+
+    def try_admit(self, req: Request) -> bool:
+        """Admit ``req`` into a free slot (B=1 prefill + full-row scatter).
+        Returns False when no slot is free — queueing and backpressure are
+        the caller's job, the pool itself never buffers."""
+        free = self.free_slots()
+        if not free:
+            return False
+        self._admit_request(req, free[0])
+        return True
+
+    def step(self) -> List[int]:
+        """One lock-step decode over the whole pool; retires slots that hit
+        EOS or budget. Returns the uids retired this step (their outputs
+        are ready in ``pop_finished``). No-op when nothing is live."""
+        if not self.live.any():
+            return []
+        with SH.use_mesh(self.mesh):
+            self.tok, self.pos, self.cache = self._step(
+                self.params, self.tok, self.pos, jnp.asarray(self.live),
+                self.cache)
+        toks = np.asarray(self.tok)     # the one host sync per step
+        self.stats.steps += 1
+        self.stats.live_slot_steps += int(self.live.sum())
+        retired: List[int] = []
+        for slot in np.flatnonzero(self.live):
+            s = self._slots[slot]
+            req = s.req
+            s.tokens.append(int(toks[slot]))
+            if (len(s.tokens) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and s.tokens[-1] == req.eos_id)):
+                retired.append(req.uid)
+                self._retire(int(slot))
+        return retired
+
+    def cancel(self, uid: int) -> bool:
+        """Free the slot holding ``uid`` without producing a result
+        (deadline expiry mid-decode, failover bookkeeping). The slot's
+        stale KV needs no scrubbing: the next admission's full-row scatter
+        overwrites it. Returns False if ``uid`` is not live here."""
+        for slot, s in enumerate(self._slots):
+            if s.req is not None and s.req.uid == uid:
+                self.live[slot] = False
+                s.req = None
+                self._ttft.pop(uid, None)
+                self.stats.canceled += 1
+                return True
+        return False
+
+    def pop_finished(self) -> List[RequestOutput]:
+        """Drain completed outputs (uid-sorted) accumulated since the last
+        call."""
+        out = [self._results[u] for u in sorted(self._results)]
+        self._results = {}
+        return out
+
+    # ------------------------------------------------------------------
+    # Admission / retirement internals
+    # ------------------------------------------------------------------
+
+    def _admit_request(self, req: Request, slot: int) -> None:
         need = self._positions_needed(req)
-        if need > self.max_seq:
+        if self._seq_cache and need > self.max_seq:
             raise ValueError(
                 f"request {req.uid} needs {need} positions "
                 f"(prefix {self.prefix_len} + prompt + budget) "
@@ -244,7 +364,7 @@ class ContinuousEngine:
         s.used = True
         s.req = req
         s.tokens = [first]
-        s.t_admit = now - t0
+        s.t_admit = now - self._t0
         s.t_first = now
         self.stats.admitted += 1
         ttft = (now - tpf) * 1e3
@@ -253,9 +373,9 @@ class ContinuousEngine:
                 or (req.eos_id is not None and first == req.eos_id))
         self.live[slot] = not done
         if done:
-            self._retire(slot, t0)
+            self._retire(slot)
 
-    def _retire(self, slot: int, t0: float) -> None:
+    def _retire(self, slot: int) -> None:
         s = self._slots[slot]
         req = s.req
         assert req is not None
@@ -265,8 +385,8 @@ class ContinuousEngine:
         self._results[req.uid] = RequestOutput(
             uid=req.uid, tokens=np.asarray(s.tokens, np.int32),
             ttft_ms=self._ttft[req.uid], tpot_ms=tpot, slot=slot,
-            admitted_s=s.t_admit, finished_s=now - t0,
-            latency_s=(now - t0) - req.arrival_s)
+            admitted_s=s.t_admit, finished_s=now - self._t0,
+            latency_s=(now - self._t0) - req.arrival_s)
         self.live[slot] = False
         s.req = None
         self.stats.finished += 1
@@ -279,45 +399,46 @@ class ContinuousEngine:
         """Replay a trace: admit each request once its arrival time passes
         and a slot is free (FIFO), decode the pool in lock-step, return
         outputs sorted by uid. Re-entrant: the pool and the occupancy
-        stats are reset per run (compiled executables are kept)."""
-        with SH.use_mesh(self.mesh):
-            self._reset_pool()
-        self.stats.reset()
-        self._results: Dict[int, RequestOutput] = {}
-        self._ttft: Dict[int, float] = {}
+        stats are reset per run (compiled executables are kept).
+
+        ``KeyboardInterrupt`` (ctrl-C / the launcher's SIGTERM handler)
+        triggers a graceful drain instead of dying mid-step: admission
+        stops, live slots decode to completion, the queued remainder is
+        dropped, and the completed outputs are returned with
+        ``stats.interrupted`` set. A second interrupt aborts immediately."""
+        self.start()
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
-        t0 = time.perf_counter()
+        done: Dict[int, RequestOutput] = {}
+        draining = False
 
         while queue or self.live.any():
-            now = time.perf_counter() - t0
-            # admit every arrived request that fits a free slot
-            while queue and queue[0].arrival_s <= now:
-                free = np.flatnonzero(~self.live)
-                free = [i for i in free if self._slots[i].req is None]
-                if not free:
-                    break
-                self._admit_request(queue.popleft(), int(free[0]), t0)
-            if not self.live.any():
-                if queue:       # pool idle, next arrival in the future
-                    time.sleep(min(1e-3, max(0.0,
-                               queue[0].arrival_s - (time.perf_counter() - t0))))
-                continue
+            try:
+                if draining:
+                    if not self.live.any():
+                        break
+                else:
+                    now = self.now()
+                    # admit every arrived request that fits a free slot
+                    while (queue and queue[0].arrival_s <= now
+                           and self.try_admit(queue[0])):
+                        queue.popleft()
+                    if not self.live.any():
+                        if queue:   # pool idle, next arrival in the future
+                            time.sleep(min(1e-3, max(
+                                0.0, queue[0].arrival_s - self.now())))
+                        for o in self.pop_finished():
+                            done[o.uid] = o
+                        continue
+                self.step()
+                for o in self.pop_finished():
+                    done[o.uid] = o
+            except KeyboardInterrupt:
+                if draining:
+                    raise               # second interrupt: stop for real
+                draining = True
+                self.stats.interrupted = True
 
-            with SH.use_mesh(self.mesh):
-                self.tok, self.pos, self.cache = self._step(
-                    self.params, self.tok, self.pos, jnp.asarray(self.live),
-                    self.cache)
-            toks = np.asarray(self.tok)     # the one host sync per step
-            self.stats.steps += 1
-            self.stats.live_slot_steps += int(self.live.sum())
-            for slot in np.flatnonzero(self.live):
-                s = self._slots[slot]
-                req = s.req
-                s.tokens.append(int(toks[slot]))
-                if (len(s.tokens) >= req.max_new_tokens
-                        or (req.eos_id is not None
-                            and s.tokens[-1] == req.eos_id)):
-                    self._retire(int(slot), t0)
-
-        return [self._results[u] for u in sorted(self._results)]
+        for o in self.pop_finished():
+            done[o.uid] = o
+        return [done[u] for u in sorted(done)]

@@ -167,6 +167,59 @@ def test_supervisor_exhausts_retries(tmp_path):
     assert sup.restores == sup.max_retries
 
 
+def test_supervisor_retry_budget_is_consecutive(tmp_path):
+    """Regression: the retry budget counts *consecutive* failures, not
+    lifetime ones. A long run with more total recovered incidents than
+    max_retries — each followed by successful steps — must complete; only
+    max_retries+1 failures in a row may raise. (The old lifetime counter
+    killed week-long runs that had absorbed a handful of spread-out node
+    losses.)"""
+    cm = CheckpointManager(str(tmp_path))
+    failed_at = set()
+
+    def do_step(state, step):
+        # 4 transient one-shot failures, spread across the run: each step
+        # fails exactly once, succeeds on replay
+        if step in (3, 7, 11, 15) and step not in failed_at:
+            failed_at.add(step)
+            raise RuntimeError("transient node loss")
+        return {"x": state["x"] + 1}, {"loss": 0.0}
+
+    sup = Supervisor(cm, save_every=2, max_retries=3,
+                     backoff_base_s=0.0)     # keep the test instant
+    _, report = sup.run({"x": jnp.zeros(())}, 0, 20, do_step)
+    assert len(failed_at) == 4 > sup.max_retries, \
+        "trace must exceed the old lifetime budget"
+    assert report.completed_steps == 20
+    assert report.failures == 4              # lifetime count still reported
+    assert sup.health.consecutive_errors == 0
+
+
+def test_supervisor_backs_off_between_restores(tmp_path, monkeypatch):
+    """Restore attempts are separated by capped exponential backoff
+    (base * 2**(k-1), k = consecutive failures so far), so a flapping node
+    is not hammered with restore/replay cycles."""
+    import repro.distributed.fault_tolerance as FT
+    cm = CheckpointManager(str(tmp_path))
+    sleeps = []
+    monkeypatch.setattr(FT.time, "sleep", sleeps.append)
+    calls = {"fails": 0}
+
+    def do_step(state, step):
+        if step == 4 and calls["fails"] < 3:
+            calls["fails"] += 1
+            raise RuntimeError("flapping")
+        return {"x": state["x"] + 1}, {"loss": 0.0}
+
+    sup = Supervisor(cm, save_every=2, max_retries=3,
+                     backoff_base_s=0.1, backoff_cap_s=0.15)
+    _, report = sup.run({"x": jnp.zeros(())}, 0, 8, do_step)
+    assert report.completed_steps == 8
+    # 0.1, 0.2->capped 0.15, 0.4->capped 0.15
+    assert sleeps == [pytest.approx(0.1), pytest.approx(0.15),
+                      pytest.approx(0.15)]
+
+
 def test_supervisor_reports_metrics(tmp_path):
     cm = CheckpointManager(str(tmp_path))
     seen = []

@@ -1,0 +1,321 @@
+"""Chaos suite for the fault-tolerant replica router (serving/router.py).
+
+The core claim under test: because the cushion/sink prefix KV is replicated
+bit-identically on every replica (KVSink/IntactKV) and greedy decode is
+batch-composition independent, a request retried from scratch on a
+surviving replica reproduces the exact tokens of a no-fault run — so
+failover is checkable token-for-token, not just "it didn't crash":
+
+* kill one of K=3 replicas mid-trace -> every request completes, greedy
+  tokens identical to the no-fault run, retries/failovers/deaths visible
+  in RouterStats;
+* all replicas dead -> clean ``AllReplicasDead``, never a hang;
+* bounded admission queue -> explicit ``queue_full`` rejections with exact
+  counts;
+* deadlines -> ``deadline-queued`` (expired waiting) vs
+  ``deadline-decoding`` (canceled mid-decode);
+* drain under load (injected KeyboardInterrupt) -> live slots complete
+  with parity, queued remainder rejected as ``draining``;
+* heartbeat corruption -> DEAD via heartbeat-age timeout, work fails over;
+* stall -> straggler flagged, replica survives;
+* plus deterministic-injector and health-state-machine unit tests.
+
+Every fault schedule is a deterministic ``FailPoint`` (per-site visit
+counters), so these tests replay identically run-to-run.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import QuantConfig, get_config
+from repro.distributed.fault_injection import (FailPoint, FaultInjector,
+                                               InjectedFault)
+from repro.distributed.fault_tolerance import (DEAD, DEGRADED, HEALTHY,
+                                               HealthTracker)
+from repro.models.registry import build
+from repro.serving.router import (AllReplicasDead, ReplicaRouter,
+                                  RouterConfig)
+from repro.serving.scheduler import Request
+
+QN = QuantConfig(mode="none")
+
+
+# ---------------------------------------------------------------------------
+# Unit: deterministic fault injector
+# ---------------------------------------------------------------------------
+
+def test_failpoint_schedules_are_deterministic():
+    inj = FaultInjector([FailPoint(site="a.step", kind="crash", at_step=2)])
+    assert inj.fire("a.step") == []         # visit 0
+    assert inj.fire("b.step") == []         # other sites don't advance a's
+    assert inj.fire("a.step") == []         # visit 1
+    with pytest.raises(InjectedFault) as e:
+        inj.fire("a.step")                  # visit 2 -> fires
+    assert e.value.site == "a.step" and e.value.step == 2
+    assert inj.fire("a.step") == []         # count=1: fired out
+    assert inj.log == [("a.step", 2, "crash")]
+
+    inj.reset()                             # rearm: identical replay
+    inj.fire("a.step"), inj.fire("a.step")
+    with pytest.raises(InjectedFault):
+        inj.fire("a.step")
+
+
+def test_failpoint_seeded_random_step_reproducible():
+    a = FaultInjector([FailPoint(site="s", at_step=None, max_step=32)],
+                      seed=7)
+    b = FaultInjector([FailPoint(site="s", at_step=None, max_step=32)],
+                      seed=7)
+    assert a.points[0].at_step == b.points[0].at_step
+    assert 0 <= a.points[0].at_step < 32
+
+
+def test_injector_stall_and_heartbeat_actions():
+    slept = []
+    inj = FaultInjector([
+        FailPoint(site="r.step", kind="stall", at_step=1, stall_s=0.25),
+        FailPoint(site="r.step", kind="heartbeat", at_step=2)])
+    assert inj.fire("r.step", sleep=slept.append) == []
+    assert inj.fire("r.step", sleep=slept.append) == ["stall"]
+    assert slept == [0.25]
+    assert inj.fire("r.step", sleep=slept.append) == ["heartbeat"]
+
+
+def test_chaos_spec_parsing():
+    inj = FaultInjector.parse(
+        "crash@replica1.step:12, stall@replica0.step:5:0.25,"
+        "heartbeat@replica2.heartbeat:8")
+    kinds = [(p.kind, p.site, p.at_step) for p in inj.points]
+    assert kinds == [("crash", "replica1.step", 12),
+                     ("stall", "replica0.step", 5),
+                     ("heartbeat", "replica2.heartbeat", 8)]
+    assert inj.points[1].stall_s == 0.25
+    with pytest.raises(ValueError, match="bad --chaos entry"):
+        FaultInjector.parse("crash-replica1")
+    with pytest.raises(ValueError, match="kind"):
+        FaultInjector.parse("explode@replica0.step:1")
+
+
+# ---------------------------------------------------------------------------
+# Unit: health-state machine
+# ---------------------------------------------------------------------------
+
+def test_health_tracker_state_transitions():
+    h = HealthTracker(heartbeat_timeout_s=10.0, dead_after_errors=3,
+                      min_history=2)
+    h.beat(0.0)
+    assert h.state(0.0) == HEALTHY
+    h.record_error(1.0)
+    assert h.state(1.0) == DEGRADED         # error since last success
+    h.record_step(0.01, 2.0)
+    assert h.state(2.0) == HEALTHY          # success clears the error
+    h.record_error(3.0), h.record_error(4.0), h.record_error(5.0)
+    assert h.state(5.0) == DEAD             # 3 consecutive errors
+    assert h.errors == 4                    # lifetime count keeps history
+
+
+def test_health_tracker_heartbeat_age():
+    h = HealthTracker(heartbeat_timeout_s=10.0)
+    h.beat(0.0)
+    assert h.state(4.0) == HEALTHY
+    assert h.state(6.0) == DEGRADED         # age > timeout/2
+    assert h.state(11.0) == DEAD            # age > timeout
+    h.beat(12.0)
+    assert h.state(12.0) == HEALTHY         # resumed heartbeat recovers
+
+
+def test_health_tracker_straggler_and_no_beat():
+    h = HealthTracker(straggler_factor=3.0, min_history=2)
+    for i in range(3):
+        h.record_step(0.01, float(i))
+    assert h.record_step(0.2, 4.0, label="slow") is True
+    assert h.state(4.0) == DEGRADED and h.stragglers == ["slow"]
+    h.record_step(0.01, 5.0, beat=False)    # suppressed heartbeat
+    assert h.last_beat == 4.0               # timing recorded, no beat
+    h.mark_dead("killed")
+    assert h.state(5.0) == DEAD             # sticky
+
+
+# ---------------------------------------------------------------------------
+# Router chaos suite (K=3 replicas on paper_tiny)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def router():
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2, 3], jnp.int32),
+                                  None, QN)
+    r = ReplicaRouter(api, params, QN, n_replicas=3,
+                      cfg=RouterConfig(max_queue=64, max_retries=2,
+                                       backoff_base_s=0.0),
+                      cushion=cushion, n_slots=1, max_seq=128)
+    r.api = api     # for request construction in tests
+    r.run(_trace(api, 3, budget=2))         # warm/compile every replica
+    return r
+
+
+def _trace(api, n, budget=8, deadline=None, arrival=0.0):
+    return [Request(uid=i,
+                    batch=api.make_batch(jax.random.PRNGKey(100 + i), 1, 20),
+                    max_new_tokens=budget, arrival_s=arrival,
+                    deadline_s=deadline)
+            for i in range(n)]
+
+
+@pytest.fixture()
+def cfg_guard(router):
+    """Restore router policy knobs mutated by a test."""
+    import dataclasses
+    saved = dataclasses.asdict(router.cfg)
+    yield router.cfg
+    for k, v in saved.items():
+        setattr(router.cfg, k, v)
+
+
+def test_kill_one_of_three_replicas_token_parity(router):
+    """The acceptance gate: kill replica 1 mid-trace; every request still
+    completes, with greedy tokens bit-identical to the no-fault run, and
+    the retries/failovers are visible in RouterStats."""
+    reqs = _trace(router.api, 9, budget=8)
+    base = router.run(reqs)
+    assert len(base.outputs) == 9 and not base.rejected
+    want = {o.uid: o.tokens for o in base.outputs}
+
+    kill = FaultInjector([FailPoint(site="replica1.step", at_step=2)])
+    res = router.run(reqs, injector=kill)
+    assert len(res.outputs) == 9 and not res.rejected
+    for o in res.outputs:
+        np.testing.assert_array_equal(o.tokens, want[o.uid])
+    st = res.stats
+    assert st.replica_deaths == 1
+    assert st.failovers >= 1 and st.retries >= 1
+    assert st.completed == 9
+    states = [p["state"] for p in st.per_replica]
+    assert states[1] == DEAD and states.count(DEAD) == 1
+    assert any(o.attempts > 1 for o in res.outputs), \
+        "a failed-over request must record its retry"
+
+
+def test_all_replicas_dead_raises_not_hangs(router):
+    """Every replica crashing must surface as AllReplicasDead promptly —
+    the router may not spin waiting for capacity that will never return."""
+    inj = FaultInjector([FailPoint(site=f"replica{i}.step", at_step=0)
+                         for i in range(3)])
+    t0 = time.perf_counter()
+    with pytest.raises(AllReplicasDead, match="3 replicas DEAD"):
+        router.run(_trace(router.api, 6, budget=8), injector=inj)
+    assert time.perf_counter() - t0 < 30.0
+    assert router.stats.replica_deaths == 3
+
+
+def test_backpressure_queue_full_rejections(router, cfg_guard):
+    """Bounded admission queue: arrivals beyond capacity + queue bound get
+    explicit queue_full rejections, with exact accounting."""
+    cfg_guard.max_queue = 2
+    res = router.run(_trace(router.api, 8, budget=4))
+    # 8 simultaneous arrivals, queue bound 2: uids 0-1 accepted, 2-7
+    # rejected before any dispatch frees capacity
+    assert res.stats.rejections == {"queue_full": 6}
+    assert res.stats.rejected == 6
+    assert {r.reason for r in res.rejected} == {"queue_full"}
+    assert sorted(o.uid for o in res.outputs) == [0, 1]
+    assert res.stats.submitted == 2 and res.stats.completed == 2
+    assert res.stats.queue_depth_peak <= 2
+
+
+def test_deadline_expires_mid_decode(router):
+    """A deadline that passes while the request is decoding cancels the
+    slot (deadline-decoding), freeing it without a result."""
+    reqs = _trace(router.api, 1, budget=60, deadline=0.035)
+    res = router.run(reqs)
+    assert not res.outputs
+    assert [r.reason for r in res.rejected] == ["deadline-decoding"]
+    assert res.stats.rejections == {"deadline-decoding": 1}
+
+
+def test_deadline_expires_mid_queue(router):
+    """A deadline that passes while the request waits in the admission
+    queue rejects it as deadline-queued (it never cost a prefill)."""
+    long = _trace(router.api, 3, budget=60)             # fill all 3 slots
+    victim = Request(uid=3,
+                     batch=router.api.make_batch(jax.random.PRNGKey(103),
+                                                 1, 20),
+                     max_new_tokens=4, deadline_s=0.035)
+    res = router.run(long + [victim])
+    assert sorted(o.uid for o in res.outputs) == [0, 1, 2]
+    assert [(r.uid, r.reason) for r in res.rejected] == \
+        [(3, "deadline-queued")]
+
+
+def test_drain_under_load_completes_live_slots(router):
+    """An injected KeyboardInterrupt mid-trace takes the graceful-drain
+    path: live slots decode to completion (with parity), the queued
+    remainder is rejected as draining, and stats.drained is set."""
+    reqs = _trace(router.api, 6, budget=16)
+    base = router.run(reqs)
+    want = {o.uid: o.tokens for o in base.outputs}
+
+    inj = FaultInjector([FailPoint(site="replica0.step", kind="interrupt",
+                                   at_step=2)])
+    res = router.run(reqs, injector=inj)
+    assert res.stats.drained
+    # capacity is 3 slots (one per replica): uids 0-2 were live when the
+    # interrupt landed and must finish; 3-5 were queued and are rejected
+    assert sorted(o.uid for o in res.outputs) == [0, 1, 2]
+    for o in res.outputs:
+        np.testing.assert_array_equal(o.tokens, want[o.uid])
+    assert {r.reason for r in res.rejected} == {"draining"}
+    assert sorted(r.uid for r in res.rejected) == [3, 4, 5]
+
+
+def test_heartbeat_corruption_kills_via_timeout(router, cfg_guard):
+    """A corrupted heartbeat (the engine still answers, the liveness signal
+    stops refreshing) must kill the replica through heartbeat-age timeout
+    and fail its work over — completed requests keep token parity."""
+    reqs = _trace(router.api, 6, budget=24)
+    base = router.run(reqs)
+    want = {o.uid: o.tokens for o in base.outputs}
+
+    cfg_guard.heartbeat_timeout_s = 0.05
+    inj = FaultInjector([FailPoint(site="replica1.step", kind="heartbeat",
+                                   at_step=1)])
+    res = router.run(reqs, injector=inj)
+    assert res.stats.replica_deaths >= 1
+    assert [p["state"] for p in res.stats.per_replica][1] == DEAD
+    assert len(res.outputs) == 6 and not res.rejected
+    for o in res.outputs:
+        np.testing.assert_array_equal(o.tokens, want[o.uid])
+
+
+def test_stall_flags_straggler_without_killing(router, cfg_guard):
+    """A stalled step trips the straggler detector (DEGRADED territory) but
+    must not kill the replica or lose work."""
+    cfg_guard.straggler_history = 2
+    inj = FaultInjector([FailPoint(site="replica0.step", kind="stall",
+                                   at_step=4, stall_s=0.3)])
+    res = router.run(_trace(router.api, 3, budget=12), injector=inj)
+    assert len(res.outputs) == 3 and not res.rejected
+    assert res.stats.replica_deaths == 0
+    assert len(router.replicas[0].health.stragglers) >= 1
+    assert res.stats.per_replica[0]["stragglers"] >= 1
+
+
+def test_retries_exhausted_rejects(router, cfg_guard):
+    """A replica set that keeps crashing on admission burns the per-request
+    retry budget and ends in explicit retries_exhausted rejections (when
+    capacity survives elsewhere) or AllReplicasDead (when it doesn't).
+    Here replica deaths leave survivors, so the work retries and lands."""
+    cfg_guard.max_retries = 0
+    # crash replica 0 the moment the first admission touches it: the
+    # request's only attempt is burned -> retries_exhausted
+    inj = FaultInjector([FailPoint(site="replica0.admit", at_step=0)])
+    res = router.run(_trace(router.api, 3, budget=4), injector=inj)
+    assert res.stats.replica_deaths == 1
+    assert res.stats.rejections.get("retries_exhausted", 0) >= 1
+    # the untouched requests still complete on replicas 1 and 2
+    assert len(res.outputs) == 2

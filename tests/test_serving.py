@@ -290,9 +290,45 @@ def test_budget_validation_and_unsupported_family():
     with pytest.raises(ValueError, match="max_seq"):
         ce.run([big])
 
-    ssm = build(reduced(get_config("xlstm-350m"), dtype="float32"))
+    # every registry family now publishes a slot layout; the registry-level
+    # contract (a module without CACHE_BATCH_AXES -> clear NotImplemented,
+    # not a cryptic scatter failure) still holds for out-of-tree modules
+    import types
+
+    from repro.models.registry import ModelAPI
+    bare = ModelAPI(cfg=api.cfg, mod=types.SimpleNamespace())
     with pytest.raises(NotImplementedError, match="continuous"):
-        ContinuousEngine(ssm, None, QN, n_slots=1, max_seq=128)
+        bare.cache_batch_axes
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "whisper-base"])
+def test_continuous_recurrent_families_match_engine(arch):
+    """The families that used to be static-Engine-only serve continuously:
+    ssm's state *tree* scatters per-leaf along nested CACHE_BATCH_AXES
+    (recurrence ignores per-row pos; dead-row garbage state is overwritten
+    by the admission's full-row scatter), and encdec's per-request
+    cross-attention KV (xk/xv) rides the slot scatter so slots transcribing
+    different audio decode lock-step. Greedy outputs are token-for-token
+    identical to the static Engine per-request, through recycled slots."""
+    api, params, cushion = _family_setup(arch)
+    budgets = [5, 3, 6, 4, 5]
+    lens = [20, 26]
+    reqs = [Request(uid=i, batch=api.make_batch(jax.random.PRNGKey(100 + i),
+                                                1, lens[i % 2]),
+                    max_new_tokens=n)
+            for i, n in enumerate(budgets)]
+    ce = ContinuousEngine(api, params, QN, n_slots=2, max_seq=128,
+                          cushion=cushion)
+    outs = ce.run(reqs)
+    assert ce.stats.admitted == len(reqs)
+    assert ce.stats.finished == len(reqs)
+    assert ce.stats.recycles >= 1, "trace must exercise slot recycling"
+
+    eng = Engine(api, params, QN, cushion=cushion, max_seq=128)
+    for req, out in zip(reqs, outs):
+        ref = eng.generate(req.batch, req.max_new_tokens).tokens[0]
+        np.testing.assert_array_equal(out.tokens, ref)
+        assert out.tokens.shape == (req.max_new_tokens,)
 
 
 def test_serve_stats_reset_between_runs():
