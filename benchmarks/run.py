@@ -473,12 +473,188 @@ def router_bench(replicas: int = 2):
             f"retries={cs.retries}")
 
 
+def page_bench(tp: int = 1):
+    """Paged-KV-pool bench (``serving/paging.py``): one Poisson trace on
+    paper_tiny with a cushion prefix, served by the dense per-slot pool and
+    by the paged pool at matched ``n_slots``/``max_seq``. Parity-gated on
+    four axes before anything lands in ``results/BENCH_pages.json``:
+
+    * token-for-token identity paged vs contiguous on the same seeded trace
+    * pool bytes reduced >= 2x at matched slots (the page store + tables +
+      batch-free cushion vs the dense rows)
+    * higher sustainable ``n_slots`` at fixed memory: a 2x-slot paged pool
+      fitting inside the dense pool's byte budget serves the same trace
+      token-for-token (greedy decode is batch-composition independent)
+    * prefix caching: a stem-sharing trace hits the content-addressed page
+      registry (hits >= 1) and still matches the dense pool token-for-token
+
+    tokens/s for both pools is recorded and gated to "within noise or
+    better" (paged >= 0.8x contiguous on this CPU-scale model; the win is
+    memory, the gate guards against a pathological slowdown). ``tp > 1``
+    (``--tp``) additionally runs the paged pool on a (data=1, tp) mesh —
+    pages sharded on the heads axis — and gates its tokens against the
+    unsharded dense run, landing ``tp_parity`` in the same artifact."""
+    import json
+    import os
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.configs import QuantConfig, get_config
+    from repro.launch.serve import poisson_trace
+    from repro.models.registry import build
+    from repro.serving.scheduler import ContinuousEngine
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(mode="none")
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2, 3], jnp.int32),
+                                  None, qcfg)
+    n_slots, n_requests, rate = 8, 16, 60.0
+    prompt_lens, budgets = (48, 64), (32, 24)
+    max_seq, ps = 384, 32
+    # worst case here is 3 content pages per slot (prompt 64 + budget 24
+    # under a 3-token cushion); 36 pages hold every slot's worst case with
+    # headroom while the dense pool must provision 8 * 384 positions
+    n_pages = 36
+    reqs = poisson_trace(api, 0, n_requests, rate, prompt_lens, budgets)
+
+    def run_engine(eng):
+        eng.run(reqs)                       # warm/compile pass
+        outs = eng.run(reqs)
+        span = (max(o.finished_s for o in outs)
+                - min(r.arrival_s for r in reqs))
+        total = sum(len(o.tokens) for o in outs)
+        return outs, total / span
+
+    dense = ContinuousEngine(api, params, qcfg, n_slots=n_slots,
+                             max_seq=max_seq, cushion=cushion)
+    outs_d, tps_d = run_engine(dense)
+    bytes_d = dense.stats.pool_bytes
+
+    paged = ContinuousEngine(api, params, qcfg, n_slots=n_slots,
+                             max_seq=max_seq, cushion=cushion, paged=True,
+                             page_size=ps, n_pages=n_pages)
+    outs_p, tps_p = run_engine(paged)
+    bytes_p = paged.stats.pool_bytes
+
+    want = {o.uid: o.tokens for o in outs_d}
+    match = (len(outs_d) == n_requests == len(outs_p)
+             and all(np.array_equal(o.tokens, want[o.uid])
+                     for o in outs_p))
+    ratio = bytes_d / bytes_p
+    emit("page_dense_tokens_per_s", tps_d * 1e6,
+         f"{n_slots} slots, pool {bytes_d} B")
+    emit("page_paged_tokens_per_s", tps_p * 1e6,
+         f"{n_pages} pages x {ps}, pool {bytes_p} B")
+    emit("page_pool_bytes_ratio", ratio * 1e6, f"parity_match={match}")
+
+    # fixed-memory scaling: double the slots, keep the paged pool inside
+    # the dense pool's byte budget, and serve the identical trace
+    big = ContinuousEngine(api, params, qcfg, n_slots=2 * n_slots,
+                          max_seq=max_seq, cushion=cushion, paged=True,
+                          page_size=ps, n_pages=2 * n_pages)
+    outs_b, _ = run_engine(big)
+    bytes_b = big.stats.pool_bytes
+    match_b = (len(outs_b) == n_requests
+               and all(np.array_equal(o.tokens, want[o.uid])
+                       for o in outs_b))
+    emit("page_2x_slots_pool_bytes", bytes_b,
+         f"{2 * n_slots} paged slots vs {bytes_d} B dense "
+         f"{n_slots}-slot pool, parity={match_b}")
+
+    # prefix caching: 6 requests sharing a 62-token prompt stem (two full
+    # 32-position pages under the 3-token cushion), divergent tails
+    stem_reqs = poisson_trace(api, 1, 6, rate, (64,), (24,))
+    t0 = np.asarray(stem_reqs[0].batch["tokens"])
+    for r in stem_reqs[1:]:
+        t = np.array(r.batch["tokens"])
+        t[:, :62] = t0[:, :62]
+        r.batch["tokens"] = jnp.asarray(t)
+    dense.run(stem_reqs)                    # warm the new shapes
+    outs_sd = dense.run(stem_reqs)
+    pfx = ContinuousEngine(api, params, qcfg, n_slots=n_slots,
+                           max_seq=max_seq, cushion=cushion, paged=True,
+                           page_size=ps, n_pages=n_pages,
+                           prefix_cache=True)
+    pfx.run(stem_reqs)
+    outs_sp = pfx.run(stem_reqs)
+    hits, misses = pfx.stats.prefix_hits, pfx.stats.prefix_misses
+    want_s = {o.uid: o.tokens for o in outs_sd}
+    match_s = (len(outs_sd) == len(stem_reqs) == len(outs_sp)
+               and all(np.array_equal(o.tokens, want_s[o.uid])
+                       for o in outs_sp))
+    emit("page_prefix_hits", hits * 1e6,
+         f"misses={misses} parity={match_s}")
+
+    tp_parity = None
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        tpe = ContinuousEngine(api, params, qcfg, n_slots=n_slots,
+                               max_seq=max_seq, cushion=cushion, paged=True,
+                               page_size=ps, n_pages=n_pages,
+                               mesh=make_tp_mesh(tp))
+        outs_t, _ = run_engine(tpe)
+        tp_parity = (len(outs_t) == n_requests
+                     and all(np.array_equal(o.tokens, want[o.uid])
+                             for o in outs_t))
+        emit("page_tp_parity", float(tp_parity) * 1e6,
+             f"tp={tp} paged tokens == dense tp=1 tokens")
+
+    point = {"model": cfg.name, "tp": tp, "n_slots": n_slots,
+             "n_requests": n_requests, "rate_req_s": rate,
+             "prompt_lens": list(prompt_lens), "budgets": list(budgets),
+             "max_seq": max_seq, "page_size": ps, "n_pages": n_pages,
+             "parity_match": match,
+             "pool_bytes_dense": bytes_d, "pool_bytes_paged": bytes_p,
+             "pool_bytes_ratio": ratio,
+             "tokens_per_s_dense": tps_d, "tokens_per_s_paged": tps_p,
+             "tps_ratio": tps_p / tps_d,
+             "slots_2x_fixed_memory": {
+                 "n_slots": 2 * n_slots, "n_pages": 2 * n_pages,
+                 "pool_bytes": bytes_b, "fits_dense_budget":
+                     bool(bytes_b <= bytes_d), "parity_match": match_b},
+             "prefix_cache": {"n_requests": len(stem_reqs),
+                              "stem_tokens": 62, "hits": hits,
+                              "misses": misses, "parity_match": match_s},
+             "tp_parity": tp_parity,
+             **{k: v for k, v in paged.stats.as_dict().items()
+                if k.startswith(("pages_", "prefix_", "cushion_",
+                                 "positions_"))}}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_pages.json"), "w") as f:
+        json.dump({"bench": "pages", "points": [point]}, f, indent=1)
+    if not match:
+        raise SystemExit("paged pool diverged from the dense pool "
+                         "(token parity oracle failed)")
+    if ratio < 2.0:
+        raise SystemExit(f"paged pool bytes not reduced >= 2x at matched "
+                         f"slots: {bytes_d} -> {bytes_p} ({ratio:.2f}x)")
+    if not (bytes_b <= bytes_d and match_b):
+        raise SystemExit(
+            f"2x-slot paged pool failed the fixed-memory gate: "
+            f"{bytes_b} B vs dense {bytes_d} B, parity={match_b}")
+    if not (match_s and hits >= 1):
+        raise SystemExit(f"prefix cache gate failed: hits={hits} "
+                         f"parity={match_s}")
+    if tps_p < 0.8 * tps_d:
+        raise SystemExit(f"paged tokens/s outside noise vs dense: "
+                         f"{tps_p:.1f} vs {tps_d:.1f}")
+    if tp > 1 and not tp_parity:
+        raise SystemExit(f"tp={tp} paged serving diverged from the "
+                         f"unsharded dense run")
+
+
 EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
                  "decode_bench": decode_bench,
                  "search_bench": search_bench,
                  "serve_bench": serve_bench,
                  "w8a8_bench": w8a8_bench,
-                 "router_bench": router_bench}
+                 "router_bench": router_bench,
+                 "page_bench": page_bench}
 
 
 def main() -> None:
@@ -488,9 +664,11 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true",
                     help="kernel microbenches only (fast)")
     ap.add_argument("--tp", type=int, default=1,
-                    help="serve_bench only: tensor-parallel width (forces "
-                         "that many XLA host devices on CPU; emits "
-                         "results/BENCH_tp.json instead of BENCH_serve.json)")
+                    help="serve_bench/page_bench: tensor-parallel width "
+                         "(forces that many XLA host devices on CPU; "
+                         "serve_bench emits results/BENCH_tp.json instead "
+                         "of BENCH_serve.json; page_bench adds the tp "
+                         "paged-parity gate to BENCH_pages.json)")
     ap.add_argument("--replicas", type=int, default=2,
                     help="router_bench only: replica count behind the "
                          "fault-tolerant router")
@@ -503,7 +681,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.only in EXTRA_BENCHES:
         kw = {}
-        if args.only == "serve_bench":
+        if args.only in ("serve_bench", "page_bench"):
             kw = {"tp": args.tp}
         elif args.only == "router_bench":
             kw = {"replicas": args.replicas}

@@ -41,6 +41,24 @@ folded into the online softmax as the first block; the int8 cache holds
 content positions only, and positions below the cushion length are masked
 out of the int8 read.
 
+Paged variant
+-------------
+``flash_decode_paged`` reads the same online-softmax body through a page
+table instead of dense per-row caches: the KV store is a flat page pool
+``(n_pages, page_size, K, hd)`` and each batch row owns a ``(P,)`` row of
+the scalar-prefetched ``page_table`` mapping logical page ``j`` (cache
+positions ``[j*ps, (j+1)*ps)``) to a physical page. The only change is the
+k/v BlockSpec index map — ``(b // K, j, ...)`` becomes
+``(page_table[b // K, j], 0, ...)`` — the grid, masking arithmetic (``kj``
+stays the *logical* position) and scratch reduction are untouched, so a
+page table that happens to be the identity reproduces the contiguous
+kernel bit-for-bit at matched chunk size. Unmapped logical pages point at
+the reserved scratch page 0; their positions are always masked (beyond
+``pos`` or below the cushion), so scratch content is don't-care. Unlike
+the contiguous entry, fp pools may pass a cushion block here: paging moves
+the cushion out of the per-slot rows into one shared batch-free ref for
+every dtype (serving/paging.py).
+
 Tensor parallelism
 ------------------
 The kernel is head-parallel by construction (the grid never mixes kv
@@ -50,6 +68,9 @@ heads), so a tp mesh shards it by slicing heads per device —
 replicated fp cushion block sliced to local heads on entry (the stored
 block stays whole on every shard; see models/*.cache_roles). Requires
 K % tp == 0; model code falls back to the unsharded entry otherwise.
+``decode_attention_tp_paged`` does the same for the paged entry with the
+page table replicated (page ids are shard-local row metadata, identical
+on every shard).
 """
 from __future__ import annotations
 
@@ -236,4 +257,108 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos,
                         pltpu.VMEM((Gp, hd), jnp.float32)],
         interpret=interpret,
     )(*args)
+    return out[:, :, :G].reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       page_table: jax.Array, pos,
+                       k_scale: jax.Array | None = None,
+                       v_scale: jax.Array | None = None,
+                       kc: jax.Array | None = None,
+                       vc: jax.Array | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Single-token decode attention over a paged (possibly int8) KV pool.
+
+    q: (B, H, hd) — one new query per pool slot.
+    k_pages/v_pages: (n_pages, ps, K, hd) flat page store; fp, or int8 when
+        k_scale/v_scale are given ((K,) shared or per-row (B, K) scales,
+        exactly as in ``flash_decode``).
+    page_table: (B, P) int32 — row b's logical page j holds cache positions
+        [j*ps, (j+1)*ps) and lives at physical page page_table[b, j].
+        P * ps = the pool's max_seq. The table is scalar-prefetched: the
+        k/v BlockSpec index maps dereference it, so each grid program DMAs
+        exactly its row's physical page for chunk j. Entry 0 is the scratch
+        page (unmapped logical pages; always masked).
+    pos: () or (B,) int32 decode positions in *logical* coordinates —
+        identical semantics to the contiguous kernel, including pos < 0
+        retired rows.
+    kc/vc: (m, K, hd) fp cushion covering logical positions [0:m). Allowed
+        for BOTH fp and int8 pools: the paged layout stores the shared
+        cushion once, batch-free, never in pages (pages below m stay
+        scratch-mapped and masked via ``kj >= m``).
+
+    The chunk size is the page size, so against ``flash_decode(bkv=ps)`` on
+    the gathered dense cache the online-softmax block sequence is identical
+    and the result is bit-exact (the paging property test's gate).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    ps, K = k_pages.shape[1], k_pages.shape[2]
+    P = page_table.shape[1]
+    G = H // K
+    quantized = k_scale is not None
+    m = 0 if kc is None else kc.shape[0]
+    assert ps % 8 == 0, "page_size must be sublane-aligned (multiple of 8)"
+
+    Gp = -(-G // 8) * 8
+    q4 = q.reshape(B, K, G, hd)
+    if Gp != G:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    mp = m
+    if m:
+        mp = -(-m // 8) * 8
+        if mp != m:
+            padc = ((0, mp - m), (0, 0), (0, 0))
+            kc = jnp.pad(kc, padc)
+            vc = jnp.pad(vc, padc)
+    posa = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    scale = 1.0 / np.sqrt(hd)
+
+    # index maps receive the scalar-prefetched page table as a trailing ref;
+    # only the k/v maps dereference it (logical page j -> physical page)
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, j, pt: (b // K,)),                  # pos
+        pl.BlockSpec((1, 1, Gp, hd), lambda b, j, pt: (b // K, b % K, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda b, j, pt: (pt[b // K, j], 0, b % K, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda b, j, pt: (pt[b // K, j], 0, b % K, 0)),
+    ]
+    args = [posa, q4, k_pages, v_pages]
+    if quantized:
+        if jnp.ndim(k_scale) == 2:          # per-row (B, K) slot scales
+            sspec = pl.BlockSpec((1, 1), lambda b, j, pt: (b // K, b % K))
+        else:                               # (K,) shared by the batch
+            sspec = pl.BlockSpec((1,), lambda b, j, pt: (b % K,))
+        in_specs += [sspec, sspec]
+        args += [jnp.asarray(k_scale, jnp.float32),
+                 jnp.asarray(v_scale, jnp.float32)]
+    if m:
+        in_specs += [
+            pl.BlockSpec((mp, 1, hd), lambda b, j, pt: (0, b % K, 0)),
+            pl.BlockSpec((mp, 1, hd), lambda b, j, pt: (0, b % K, 0))]
+        args += [kc, vc]
+
+    def kernel(pt_ref, *refs, **kw):
+        del pt_ref      # consumed by the index maps only
+        _kernel(*refs, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * K, P),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, Gp, hd),
+                               lambda b, j, pt: (b // K, b % K, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((Gp, 1), jnp.float32),
+                        pltpu.VMEM((Gp, 1), jnp.float32),
+                        pltpu.VMEM((Gp, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(kernel, bkv=ps, n_kv=P, cushion_m=m, mp=mp,
+                          quantized=quantized, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Gp, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(page_table, jnp.int32), *args)
     return out[:, :, :G].reshape(B, H, hd)

@@ -18,7 +18,7 @@ from repro.configs.base import QuantConfig
 from repro.core import quantization as Q
 from repro.kernels.act_quant import act_quant_ptoken, act_quant_static
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.w8a8_matmul import w8a8_matmul
 
 
@@ -145,3 +145,75 @@ def decode_attention_tp(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     f = shard_map_compat(body, mesh, in_specs=(hs, kvs, kvs, pos_spec),
                          out_specs=hs)
     return f(q, k, v, pos)
+
+
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array, pos,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           kc: jax.Array | None = None,
+                           vc: jax.Array | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Model-level entry for the paged split-KV decode kernel. q: (B,H,hd);
+    k/v_pages: (n_pages, ps, K, hd) page store (int8 when scales given);
+    page_table: (B, P) int32 slot page tables (scalar-prefetched into the
+    kernel's index maps); pos: () or (B,) logical decode positions; kc/vc:
+    the shared batch-free cushion block (fp AND int8 pools — paging stores
+    the cushion once, outside the pages). Returns (B,H,hd)."""
+    return flash_decode_paged(q, k_pages, v_pages, page_table, pos,
+                              k_scale=k_scale, v_scale=v_scale,
+                              kc=kc, vc=vc, interpret=interpret)
+
+
+def decode_attention_tp_paged(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, page_table: jax.Array,
+                              pos, mesh, axis: str = "tp",
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None,
+                              kc: jax.Array | None = None,
+                              vc: jax.Array | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """Tensor-parallel paged decode: ``shard_map`` ``flash_decode_paged``
+    over ``axis`` with per-shard head slicing, exactly as
+    ``decode_attention_tp`` — the page store shards its K axis
+    ((n_pages, ps, K, hd), serving pool roles), the page table is
+    replicated (page ids are layout metadata, identical per shard), and the
+    shared cushion block is replicated and sliced to local heads on entry.
+    Requires K % tp == 0."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    quantized = k_scale is not None
+    pos_spec = P() if jnp.ndim(pos) == 0 else P(None)
+    hs = P(None, axis, None)              # (B, H, hd) heads-sharded
+    pgs = P(None, None, axis, None)       # (n_pages, ps, K, hd)
+    pts = P(None, None)                   # (B, P) replicated
+    cus = P(None, axis, None)             # (m, K, hd) sliced per shard
+    if quantized:
+        sspec = P(None, axis) if jnp.ndim(k_scale) == 2 else P(axis)
+        def body(q, k, v, pt, pos, ksc, vsc, kc, vc):
+            return flash_decode_paged(q, k, v, pt, pos, k_scale=ksc,
+                                      v_scale=vsc, kc=kc, vc=vc,
+                                      interpret=interpret)
+        f = shard_map_compat(
+            body, mesh,
+            in_specs=(hs, pgs, pgs, pts, pos_spec, sspec, sspec, cus, cus),
+            out_specs=hs)
+        return f(q, k_pages, v_pages, page_table, pos, k_scale, v_scale,
+                 kc, vc)
+    if kc is not None:
+        def body(q, k, v, pt, pos, kc, vc):
+            return flash_decode_paged(q, k, v, pt, pos, kc=kc, vc=vc,
+                                      interpret=interpret)
+        f = shard_map_compat(
+            body, mesh,
+            in_specs=(hs, pgs, pgs, pts, pos_spec, cus, cus), out_specs=hs)
+        return f(q, k_pages, v_pages, page_table, pos, kc, vc)
+
+    def body(q, k, v, pt, pos):
+        return flash_decode_paged(q, k, v, pt, pos, interpret=interpret)
+    f = shard_map_compat(body, mesh,
+                         in_specs=(hs, pgs, pgs, pts, pos_spec),
+                         out_specs=hs)
+    return f(q, k_pages, v_pages, page_table, pos)

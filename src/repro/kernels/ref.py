@@ -117,3 +117,30 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos,
     # fully-masked rows (retired, no cushion): zeros, not a uniform average
     out = jnp.where(jnp.any(valid, axis=1)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize a paged KV pool as the dense per-row layout:
+    pages (n_pages, ps, K, hd) + page_table (B, P) -> (B, P*ps, K, hd).
+    Row b's positions [j*ps, (j+1)*ps) come from physical page
+    page_table[b, j]; unmapped entries read the scratch page 0, whose
+    content is masked by pos / the cushion boundary downstream."""
+    B, P = page_table.shape
+    ps = pages.shape[1]
+    g = pages[page_table]                       # (B, P, ps, K, hd)
+    return g.reshape(B, P * ps, *pages.shape[2:])
+
+
+def flash_decode_paged_ref(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array, pos,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           kc: jax.Array | None = None,
+                           vc: jax.Array | None = None) -> jax.Array:
+    """Oracle for ``flash_decode_paged``: gather the page table into the
+    dense layout, then score with ``flash_decode_ref`` (the paging oracle —
+    paged attention IS dense attention over the gathered cache). fp pools
+    may carry a cushion block here (see flash_decode_paged)."""
+    return flash_decode_ref(q, gather_pages(k_pages, page_table),
+                            gather_pages(v_pages, page_table), pos,
+                            k_scale=k_scale, v_scale=v_scale, kc=kc, vc=vc)

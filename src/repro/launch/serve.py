@@ -38,6 +38,21 @@ exercise failover on a live trace:
     python -m repro.launch.serve --arch paper_tiny --smoke \
         --mode continuous --replicas 3 --chaos crash@replica1.step:6
 
+--paged swaps the continuous pool's dense per-slot rows for the paged KV
+layout (``serving/paging.py``): a flat page store plus per-slot page
+tables, the fp cushion held once (batch-free) instead of per slot, pages
+allocated on demand as decode appends and returned at retirement.
+--page-size sets the page granularity (must divide max_seq), --pages caps
+the physical pool (defaults to worst-case, i.e. no admission ever
+backpressures on pages), and --prefix-cache turns on content-addressed
+prompt-stem page sharing (fp pools only): repeated prompt stems map the
+donor's pages read-only and only prefill the tail. The final stats block
+gains the page-pool gauges (pages total/free/shared, cushion page refs,
+prefix hit/miss, pool bytes):
+
+    python -m repro.launch.serve --arch paper_tiny --smoke \
+        --mode continuous --paged --page-size 32 --prefix-cache
+
 Graceful shutdown (continuous + router modes): SIGTERM and ctrl-C drain
 instead of dying mid-step — admission stops, live slots decode to
 completion, and the final ServeStats/RouterStats are printed for the
@@ -135,10 +150,19 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
                            kv_dtype=None if args.kv_dtype == "fp"
                            else args.kv_dtype,
                            calib_batches=calib_batches,
-                           prequant=args.prequant)
+                           prequant=args.prequant,
+                           paged=args.paged, page_size=args.page_size,
+                           n_pages=args.pages,
+                           prefix_cache=args.prefix_cache)
     print(f"[serve] resident weights: "
           f"fp={eng.stats.weight_bytes_fp / 2 ** 20:.1f} MiB "
           f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB")
+    if args.paged:
+        st = eng.stats
+        print(f"[serve] paged pool: {st.pages_total} pages x "
+              f"{args.page_size} positions, "
+              f"{st.pool_bytes / 2 ** 20:.2f} MiB resident "
+              f"(cushion refs {st.cushion_page_refs})")
     if bench_path:
         eng.run(reqs)           # warm/compile pass; measure steady state
     outs = eng.run(reqs)
@@ -151,6 +175,15 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
               f"{len(reqs)} requests; live slots completed, queued "
               f"remainder dropped")
     print(f"[serve] final stats: {eng.stats.as_dict()}")
+    if args.paged:
+        st = eng.stats
+        print(f"[serve] page pool: total={st.pages_total} "
+              f"free={st.pages_free} shared={st.pages_shared} "
+              f"cushion_refs={st.cushion_page_refs} "
+              f"prefix_hits={st.prefix_hits} "
+              f"prefix_misses={st.prefix_misses} "
+              f"positions_exhausted={st.positions_exhausted} "
+              f"pool_bytes={st.pool_bytes}")
     if not outs:
         return outs
     total = sum(len(o.tokens) for o in outs)
@@ -164,6 +197,8 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
     if bench_path:
         point = {"mode": "continuous", "arch": args.arch,
                  "quant": args.quant, "prequant": args.prequant,
+                 "paged": args.paged, "page_size": args.page_size,
+                 "prefix_cache": args.prefix_cache,
                  "kv_dtype": args.kv_dtype, "slots": args.slots,
                  "rate": args.rate, "n_requests": args.n_requests,
                  "tokens_per_s": tps,
@@ -201,7 +236,9 @@ def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None):
         cfg=RouterConfig(max_queue=args.max_queue), meshes=meshes,
         n_slots=args.slots, max_seq=args.prompt_len + 8 + args.tokens + 32,
         kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
-        calib_batches=calib_batches, prequant=args.prequant)
+        calib_batches=calib_batches, prequant=args.prequant,
+        paged=args.paged, page_size=args.page_size, n_pages=args.pages,
+        prefix_cache=args.prefix_cache)
     res = router.run(reqs, injector=injector)
     for o in res.outputs:
         retry = f" attempts={o.attempts}" if o.attempts > 1 else ""
@@ -294,6 +331,24 @@ def main(argv=None):
                          "mesh; works on CPU via forced host devices (set "
                          "automatically at import) and on real accelerator "
                          "meshes alike")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous mode: paged KV pool — flat page store "
+                         "+ per-slot page tables, the fp cushion held once "
+                         "batch-free instead of copied per slot, pages "
+                         "allocated on decode appends and returned at "
+                         "retirement (serving/paging.py)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged mode: positions per KV page (must divide "
+                         "max_seq, multiple of 8)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged mode: physical page count; default sizes "
+                         "the pool for the worst case so admission never "
+                         "backpressures on pages — pass less to realize "
+                         "the memory win on overlapping workloads")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged fp pools: content-addressed prompt-stem "
+                         "page sharing — repeated stems map the donor's "
+                         "pages read-only and only prefill the tail")
     ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
                     help="KV-cache storage precision (int8 halves decode "
                          "HBM traffic; cushion prefix stays fp; the "
@@ -316,6 +371,15 @@ def main(argv=None):
     if (args.replicas > 1 or args.chaos) and args.mode != "continuous":
         ap.error("--replicas/--chaos require --mode continuous (the "
                  "router fronts ContinuousEngine replicas)")
+    if args.paged and args.mode != "continuous":
+        ap.error("--paged requires --mode continuous (the paged pool "
+                 "lives in the slot scheduler)")
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (stems are shared at "
+                 "page granularity)")
+    if args.prefix_cache and args.kv_dtype != "fp":
+        ap.error("--prefix-cache shares fp pages only (int8 pages carry "
+                 "the donor's per-slot scales)")
     if args.trace_seed is None:
         args.trace_seed = args.seed
 

@@ -413,6 +413,15 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     at prefill; per-slot scales (B, K) are accepted too (the continuous
     pool calibrates each slot's scales at its own admission prefill —
     quantization, dequant and the kernel read are then all per-row).
+
+    A third layout is the PAGED pool (serving/paging.py): kv carries
+    "page_table" (B, P) int32 and k/v become a flat (n_pages, ps, K, hd)
+    page store shared by all rows; logical positions are unchanged
+    (pos//ps selects the logical page, the table the physical one) and the
+    shared fp cushion rides in batch-free kc/vc refs for BOTH fp and int8
+    pools. Writes scatter into the mapped page; reads route through
+    flash_decode_paged (TPU) or a gather + the contiguous CPU paths.
+
     Attention runs on the Pallas split-KV flash-decode kernel on TPU, or
     the jnp oracle elsewhere. Returns (y, updated kv dict).
     """
@@ -426,6 +435,7 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     k = apply_rope(k, cos, sin)
 
     quantized = "k_scale" in kv
+    paged = "page_table" in kv
     if quantized:
         ks, vs = kv["k_scale"], kv["v_scale"]
         k_wr = quantize_kv(k, ks)
@@ -433,7 +443,21 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     else:
         k_wr = k.astype(kv["k"].dtype)
         v_wr = v.astype(kv["v"].dtype)
-    if per_row:
+    if paged:
+        # paged pool (serving/paging.py): k/v are a flat (n_pages,ps,K,hd)
+        # page store and page_table (B,P) maps row b's logical page
+        # posv//ps to a physical page. Retired rows keep a frozen pos AND a
+        # zeroed table row, so their dummy writes land on the reserved
+        # scratch page 0 — never on a page the allocator may have recycled.
+        pt = kv["page_table"]
+        ps = kv["k"].shape[1]
+        wpos = jnp.maximum(posv, 0)     # no negative page/offset wraps
+        phys = pt[jnp.arange(B), wpos // ps]
+        cache_k = kv["k"].at[phys, wpos % ps].set(k_wr[:, 0])
+        cache_v = kv["v"].at[phys, wpos % ps].set(v_wr[:, 0])
+        cache_k = constrain(cache_k, None, None, "M")
+        cache_v = constrain(cache_v, None, None, "M")
+    elif per_row:
         # each row writes at its own position (vmapped update -> scatter)
         row_wr = jax.vmap(
             lambda c, u, p_: jax.lax.dynamic_update_slice(c, u, (p_, 0, 0)))
@@ -442,18 +466,21 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
     else:
         cache_k = jax.lax.dynamic_update_slice(kv["k"], k_wr, (0, pos, 0, 0))
         cache_v = jax.lax.dynamic_update_slice(kv["v"], v_wr, (0, pos, 0, 0))
-    # keep the written cache in the serve-pool layout (heads on "M") so the
-    # per-step update is a shard-local dynamic_update_slice, never a reshard
-    cache_k = constrain(cache_k, "B", None, "M")
-    cache_v = constrain(cache_v, "B", None, "M")
+    if not paged:
+        # keep the written cache in the serve-pool layout (heads on "M") so
+        # the per-step update is a shard-local update, never a reshard
+        cache_k = constrain(cache_k, "B", None, "M")
+        cache_v = constrain(cache_v, "B", None, "M")
     new = dict(kv)
     new["k"], new["v"] = cache_k, cache_v
 
     q1 = q[:, 0]                        # (B, H, hd)
     if _use_decode_kernel():
         from repro.distributed.sharding import active_mesh
-        from repro.kernels.ops import decode_attention_pallas, \
-            decode_attention_tp
+        from repro.kernels.ops import (decode_attention_paged,
+                                       decode_attention_pallas,
+                                       decode_attention_tp,
+                                       decode_attention_tp_paged)
         mesh = active_mesh()
         tp = (mesh.shape["tp"] if mesh is not None
               and "tp" in mesh.axis_names else 1)
@@ -463,8 +490,21 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
             # flash-decode on its local head slice (local q heads, local KV
             # heads, local int8 scales; the replicated cushion block is
             # sliced per shard on entry) — no collectives inside attention
-            out = decode_attention_tp(
-                q1, cache_k, cache_v, posv, mesh,
+            if paged:
+                out = decode_attention_tp_paged(
+                    q1, cache_k, cache_v, kv["page_table"], posv, mesh,
+                    k_scale=ks if quantized else None,
+                    v_scale=vs if quantized else None,
+                    kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
+            else:
+                out = decode_attention_tp(
+                    q1, cache_k, cache_v, posv, mesh,
+                    k_scale=ks if quantized else None,
+                    v_scale=vs if quantized else None,
+                    kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
+        elif paged:
+            out = decode_attention_paged(
+                q1, cache_k, cache_v, kv["page_table"], posv,
                 k_scale=ks if quantized else None,
                 v_scale=vs if quantized else None,
                 kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
@@ -474,6 +514,35 @@ def attention_decode_kv(p: Params, x: Array, kv: Params, pos: Array,
                 k_scale=ks if quantized else None,
                 v_scale=vs if quantized else None,
                 kc=kv.get("kc"), vc=kv.get("vc"), interpret=interpret)
+    elif paged:
+        # jnp fallback for paged pools: gather the page table into the
+        # dense layout and reuse the contiguous CPU paths verbatim — the
+        # gathered values equal the contiguous pool's at every visible
+        # position and the masked tail underflows to exactly zero weight,
+        # so paged-vs-contiguous tokens stay bit-identical on CPU too.
+        from repro.kernels.ref import flash_decode_ref, gather_pages
+        kd = gather_pages(cache_k, kv["page_table"])
+        vd = gather_pages(cache_v, kv["page_table"])
+        if quantized:
+            out = flash_decode_ref(q1, kd, vd, posv, k_scale=ks, v_scale=vs,
+                                   kc=kv.get("kc"), vc=kv.get("vc"))
+        else:
+            mc = 0 if "kc" not in kv else kv["kc"].shape[0]
+            if mc:
+                # splice the shared fp cushion over the scratch-mapped
+                # positions [0:m) so the dense math matches the contiguous
+                # fp pool (which holds the cushion in-cache) bit-for-bit
+                kcb = jnp.broadcast_to(kv["kc"].astype(kd.dtype)[None],
+                                       (B,) + kv["kc"].shape)
+                vcb = jnp.broadcast_to(kv["vc"].astype(vd.dtype)[None],
+                                       (B,) + kv["vc"].shape)
+                kd = jnp.concatenate([kcb, kd[:, mc:]], axis=1)
+                vd = jnp.concatenate([vcb, vd[:, mc:]], axis=1)
+            Smax = kd.shape[1]
+            mask = jnp.arange(Smax)[None, :] <= posv[:, None]
+            out = _sdpa(q, kd, vd, mask[:, None, :], cfg)[:, 0]
+            out = jnp.where((posv >= 0)[:, None, None], out,
+                            0.0).astype(out.dtype)
     elif quantized:
         from repro.kernels.ref import flash_decode_ref
         out = flash_decode_ref(q1, cache_k, cache_v, posv, k_scale=ks,

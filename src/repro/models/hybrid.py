@@ -40,6 +40,10 @@ SUPPORTS_PREFIX_KV_SCORING = False
 # scatters the whole per-request row (KV + recurrent state) at once.
 CACHE_BATCH_AXES = {"k": 1, "v": 1, "h": 2, "conv": 2}
 
+# Attention KV pages; Mamba state stays a dense per-slot row (fixed-size
+# recurrent state has nothing to page).
+PAGED_KV_LEAVES = ("k", "v")
+
 
 def layout(cfg: ModelConfig):
     h = cfg.hybrid
@@ -392,7 +396,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
     nm = n_mamba_per_period(cfg)
     lscales = C.resolve_scales(scales, SITES, n_periods, qcfg)
 
-    kv_keys = [k for k in ("k", "v", "k_scale", "v_scale", "kc", "vc")
+    kv_keys = [k for k in ("k", "v", "k_scale", "v_scale", "kc", "vc",
+                           "page_table")
                if k in cache]
 
     def body(h, xs):

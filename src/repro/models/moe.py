@@ -195,6 +195,7 @@ write_cushion_to_cache = T.write_cushion_to_cache
 cache_roles = T.cache_roles
 placeholder_all_scales = T.placeholder_all_scales
 CACHE_BATCH_AXES = T.CACHE_BATCH_AXES
+PAGED_KV_LEAVES = T.PAGED_KV_LEAVES
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,

@@ -119,6 +119,14 @@ class ModelAPI:
                 "use serving.engine.Engine (static batch)")
         return axes
 
+    @property
+    def paged_kv_leaves(self) -> Tuple[str, ...]:
+        """Cache leaves the paged continuous pool re-lays into a flat page
+        store + per-slot page table (``ContinuousEngine(paged=True)``).
+        Empty for families without a pageable sequence cache (ssm's
+        recurrent state, encdec's per-request cross-KV)."""
+        return tuple(getattr(self.mod, "PAGED_KV_LEAVES", ()))
+
     def cushion_zeros(self, m: int, dtype=jnp.float32):
         return self.mod.cushion_zeros(self.cfg, m, dtype=dtype)
 

@@ -40,6 +40,12 @@ SUPPORTS_PREFIX_KV_SCORING = True
 # relies on decode_step accepting a (B,) per-row pos vector.
 CACHE_BATCH_AXES = {"k": 1, "v": 1}
 
+# Leaves the paged pool (ContinuousEngine(paged=True)) re-lays into a flat
+# page store + per-slot page table instead of slot-scattering; every other
+# CACHE_BATCH_AXES entry keeps its dense per-slot row. Families without
+# this marker (ssm, encdec) have no pageable sequence cache.
+PAGED_KV_LEAVES = ("k", "v")
+
 
 def layer_init(key, cfg: ModelConfig) -> Params:
     k1, k2 = jax.random.split(key)

@@ -32,6 +32,7 @@ placeholder_all_scales = T.placeholder_all_scales
 # decode is a plain token LM (patches enter at prefill only), so VLM slots
 # batch-continuously exactly like dense ones
 CACHE_BATCH_AXES = T.CACHE_BATCH_AXES
+PAGED_KV_LEAVES = T.PAGED_KV_LEAVES
 
 
 def forward(params: Params, tokens: Array, cfg: ModelConfig,

@@ -102,7 +102,19 @@ class ServeStats:
     ``canceled`` counts live slots freed without a result (deadline expiry
     mid-decode, router failover bookkeeping); ``interrupted`` records that
     the run ended via the graceful-drain path (ctrl-C / SIGTERM) rather
-    than trace exhaustion."""
+    than trace exhaustion.
+
+    Page-pool gauges (zero on contiguous pools): ``pages_total`` /
+    ``pool_bytes`` are layout facts set at pool construction (preserved
+    across ``reset()`` like the weight bytes); ``pages_free`` /
+    ``pages_shared`` / ``cushion_page_refs`` mirror the allocator after
+    every admission/retirement (shared = refcount > 1, i.e. prefix-cache
+    donor pages and registry pins; cushion refs = the pool's pinned
+    reference + one per live slot mapping the shared cushion block).
+    ``prefix_hits`` / ``prefix_misses`` count prefix-cache lookups at
+    admission, and ``positions_exhausted`` counts requests rejected because
+    prompt+budget exceeds the pool's position capacity (the admission-time
+    check that replaces silently running out of positions mid-decode)."""
     n_slots: int = 0
     steps: int = 0              # lock-step decode iterations
     live_slot_steps: int = 0    # sum over steps of live slots that step
@@ -113,16 +125,29 @@ class ServeStats:
     interrupted: bool = False   # run ended by graceful drain
     weight_bytes_fp: int = 0    # resident fp param bytes (engine load)
     weight_bytes_int8: int = 0  # resident int8 (prequantized) param bytes
+    pool_bytes: int = 0         # KV pool bytes (pages or dense rows)
+    pages_total: int = 0        # page count incl. the reserved scratch page
+    pages_free: int = 0         # allocator free-list size
+    pages_shared: int = 0       # pages with refcount > 1 (prefix sharing)
+    cushion_page_refs: int = 0  # shared cushion block: pool pin + live slots
+    prefix_hits: int = 0        # admissions that mapped cached stem pages
+    prefix_misses: int = 0      # eligible admissions with no cached stem
+    positions_exhausted: int = 0  # requests rejected: prompt+budget > pool
 
     def reset(self) -> None:
-        """Zero every per-run counter, keeping ``n_slots`` and the resident
-        weight bytes (load-time configuration facts). The scheduler calls
+        """Zero every per-run counter, keeping ``n_slots``, the resident
+        weight bytes and the pool layout facts (``pool_bytes`` /
+        ``pages_total``) — load-time configuration. The scheduler calls
         this at the top of each ``run()`` so a stats object shared across
         traces in one process (serve_bench's warm-up pass, repeated bench
-        runs) never leaks occupancy counters from the previous run."""
+        runs) never leaks occupancy counters from the previous run; it
+        re-publishes the live allocator gauges right after."""
         self.steps = self.live_slot_steps = 0
         self.admitted = self.finished = self.recycles = self.canceled = 0
         self.interrupted = False
+        self.pages_free = self.pages_shared = self.cushion_page_refs = 0
+        self.prefix_hits = self.prefix_misses = 0
+        self.positions_exhausted = 0
 
     def occupancy(self) -> float:
         return self.live_slot_steps / max(1, self.steps * self.n_slots)

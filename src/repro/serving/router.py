@@ -158,7 +158,14 @@ class ReplicaRouter:
 
     ``meshes``: optional per-replica device meshes
     (``launch.mesh.make_replica_meshes`` — the ``data``-axis groups);
-    ``None`` builds every replica on the default device (CPU tests)."""
+    ``None`` builds every replica on the default device (CPU tests).
+
+    ``paged=True`` (with ``page_size``/``n_pages``/``prefix_cache``) rides
+    through like any engine kwarg: replicas share the quantization plan but
+    each owns its page pool, page table and prefix-cache registry — page
+    exhaustion in one replica backpressures like a full slot pool and the
+    router retries elsewhere, while an over-capacity request raises at
+    admission and is rejected as invalid (``positions_exhausted``)."""
 
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  n_replicas: int = 2, cfg: Optional[RouterConfig] = None,

@@ -64,11 +64,34 @@ KV rows, and decode quantizes/dequantizes each row with its own scales
 kc/vc is batch-free and rewritten bit-identically on every admission
 (KVSink/IntactKV).
 
+Paged KV pool (``paged=True``): the dense per-slot rows become a flat page
+store ``(L, n_pages, page_size, K, hd)`` plus a per-slot page table — KV
+memory then scales with *live tokens*, not ``n_slots * max_seq``, so more
+slots fit a fixed HBM budget. The host-side allocator (serving/paging.py
+``PagePool``) reserves every page a request can need at admission (mid-
+decode exhaustion is impossible; a full pool backpressures exactly like a
+full slot pool), maps prompt pages immediately (the admission scatter
+routes each logical page of the B=1 row to its physical page) and decode
+pages lazily as positions cross page boundaries. The fp cushion block
+leaves the per-slot rows entirely: it lives ONCE in batch-free ``kc``/
+``vc`` pool leaves written at pool reset and only ever read afterwards —
+the refcounted, read-only cushion page every slot maps — so recycling a
+slot re-scatters content pages but never copies the sink block again.
+Reads route through ``kernels/flash_decode.flash_decode_paged`` (scalar-
+prefetched page table) on TPU or a gather + the contiguous jnp paths on
+CPU; either way paged and contiguous pools decode token-for-token
+identical traces. ``prefix_cache=True`` (fp pools only) additionally
+content-addresses full prompt-stem pages so a repeated stem maps the
+donor's pages read-only (refcount++) and prefills only the tail against
+an extended cushion — pages are write-once, so copy-on-write degenerates
+to copy-never.
+
 Scope: greedy decoding for every registry family with a
 ``CACHE_BATCH_AXES`` slot layout — dense / moe / vlm / hybrid (KV pools,
-int8-capable) plus ssm and encdec (fp state/KV pools). When every request
-starts together with one shared budget, prefer the static ``Engine``: its
-device-resident scan syncs twice per request instead of once per token.
+int8-capable) plus ssm and encdec (fp state/KV pools; no paged mode —
+nothing to page). When every request starts together with one shared
+budget, prefer the static ``Engine``: its device-resident scan syncs twice
+per request instead of once per token.
 """
 from __future__ import annotations
 
@@ -88,6 +111,7 @@ from repro.monitoring import ServeStats, resident_weight_bytes
 from repro.serving.engine import (cache_seq_len, cushion_prefix_len,
                                   plan_quantization,
                                   shard_params_for_serving)
+from repro.serving.paging import PagePool
 
 
 @dataclasses.dataclass
@@ -148,7 +172,9 @@ class ContinuousEngine:
                  n_slots: int = 4, max_seq: int = 2048, cushion=None,
                  scales=None, stats: Optional[ServeStats] = None,
                  mesh=None, kv_dtype=None, calib_batches=None,
-                 prequant: bool = False):
+                 prequant: bool = False, paged: bool = False,
+                 page_size: int = 64, n_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.api = api
         self.mesh = mesh
         params, scales = plan_quantization(
@@ -165,7 +191,8 @@ class ContinuousEngine:
         self.prefix_len = cushion_prefix_len(cushion)
         axes = dict(api.cache_batch_axes)   # raises for unsupported families
         # recurrent-only caches (ssm) have no sequence axis: the pool never
-        # runs out of positions, so the max_seq admission check is vacuous
+        # runs out of positions — the max_seq admission capacity check only
+        # applies to families with a sequence cache
         self._seq_cache = any(k in axes for k in ("k", "v"))
         if kv_dtype is not None:
             # per-slot dequant scales travel with their KV rows: the slot
@@ -173,6 +200,43 @@ class ContinuousEngine:
             # the pool's (L,n_slots,K) leaves at the same batch axis
             axes.update({"k_scale": 1, "v_scale": 1})
         self._axes = axes
+
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self._paged_leaves = api.paged_kv_leaves
+        if self.paged:
+            if not self._paged_leaves:
+                raise ValueError(
+                    "paged=True needs a pageable sequence cache "
+                    "(PAGED_KV_LEAVES); this family's cache is per-request "
+                    "state with nothing to page")
+            if page_size % 8:
+                raise ValueError(
+                    f"page_size {page_size} must be sublane-aligned "
+                    f"(multiple of 8)")
+            if self.max_seq % page_size:
+                raise ValueError(
+                    f"page_size {page_size} must divide the pool max_seq "
+                    f"{self.max_seq}")
+            if prefix_cache and kv_dtype is not None:
+                raise ValueError(
+                    "prefix_cache shares fp pages only: int8 donor pages "
+                    "are quantized with the donor slot's dequant scales "
+                    "and cannot be read under another slot's")
+        self._P = self.max_seq // page_size
+        c0 = self.prefix_len // page_size
+        if n_pages is None:
+            # worst case every slot owns all its content pages: paging then
+            # never backpressures where the dense pool wouldn't (benchmarks
+            # pass a smaller pool to realize the memory win)
+            n_pages = n_slots * (self._P - c0) + 1
+        self.n_pages = n_pages
+        self._prefix_cache = bool(prefix_cache)
+        # non-paged leaves (int8 scales, hybrid's Mamba state) keep their
+        # dense per-slot rows and the plain slot scatter
+        self._paged_axes = {k: v for k, v in axes.items()
+                            if k not in self._paged_leaves}
+
         self.stats = stats if stats is not None else ServeStats(n_slots=n_slots)
         self.stats.n_slots = n_slots
         self.stats.weight_bytes_fp, self.stats.weight_bytes_int8 = \
@@ -181,6 +245,11 @@ class ContinuousEngine:
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
                                         scales=scales))
+        # prefix-cache tail prefill: the cushion is a traced argument (the
+        # shared stem extends it), one compile per (stem pages, tail) shape
+        self._prefill_cu = jax.jit(
+            lambda p, b, c, cu: api.prefill(p, b, c, qcfg, cushion=cu,
+                                            scales=scales))
 
         def admit(cache, row, slot, pos, tok, rpos, tok0):
             cache = dict(cache)
@@ -196,19 +265,47 @@ class ContinuousEngine:
             return (cache, pos.at[slot].set(jnp.asarray(rpos, jnp.int32)),
                     tok.at[slot].set(jnp.asarray(tok0, jnp.int32)))
 
-        def step(p, tok, pos, live, cache):
-            logits, cache = api.decode_step(p, tok, pos, cache, qcfg,
-                                            scales=scales)
+        def admit_paged(cache, row, slot, pos, tok, rpos, tok0, scatter_idx):
+            # route each logical page of the B=1 row to its physical page:
+            # owned prompt pages land at their allocator-assigned index,
+            # everything else (cushion positions, shared donor pages, pages
+            # beyond the prompt) at the don't-care scratch page 0. The
+            # shared kc/vc cushion leaves are deliberately untouched —
+            # written once at pool reset, read-only ever after.
+            cache = dict(cache)
+            for key in self._paged_leaves:
+                rp = row[key][:, 0]             # (L, max_seq, K, hd)
+                rp = rp.reshape(rp.shape[0], self._P, self.page_size,
+                                *rp.shape[2:])
+                cache[key] = cache[key].at[:, scatter_idx].set(
+                    rp.astype(cache[key].dtype))
+            for key, ax in self._paged_axes.items():
+                cache[key] = _scatter_row(cache[key], row[key], ax, slot)
+            return (cache, pos.at[slot].set(jnp.asarray(rpos, jnp.int32)),
+                    tok.at[slot].set(jnp.asarray(tok0, jnp.int32)))
+
+        def step(p, tok, pos, live, cache, cu):
+            # cu: the paged pool's shared read-only cushion block, passed
+            # OUTSIDE the donated cache so its buffers are never consumed —
+            # the same two device arrays serve every step of the engine's
+            # lifetime (empty dict for contiguous pools, whose cushion
+            # lives inside the cache rows / kc leaves)
+            full = dict(cache)
+            full.update(cu)
+            logits, full = api.decode_step(p, tok, pos, full, qcfg,
+                                           scales=scales)
+            out_cache = {k: full[k] for k in cache}
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = jnp.where(live, nxt, 0)          # dead rows feed token 0
             pos = jnp.where(live, pos + 1, pos)    # freeze retired offsets
-            return nxt, pos, cache
+            return nxt, pos, out_cache
 
         # donate the pool cache: the old buffer is dead once self.cache is
         # rebound, and without donation every per-layer cache write would
         # materialize a pool-sized copy per decode step (and 2x peak HBM).
         # Backends that can't donate (CPU) just ignore the hint.
         self._admit = jax.jit(admit, donate_argnums=(0,))
+        self._admit_paged = jax.jit(admit_paged, donate_argnums=(0,))
         self._step = jax.jit(step, donate_argnums=(4,))
         self.start()
 
@@ -223,23 +320,105 @@ class ContinuousEngine:
                                    per_slot_scales=self.kv_dtype is not None)
 
     def _reset_pool(self) -> None:
-        self.cache = self._shard_cache(self._init_cache(self.n_slots))
+        if self.paged:
+            self._reset_pool_paged()
+        else:
+            self.cache = self._shard_cache(self._init_cache(self.n_slots))
+            self.cushion_block = {}
+        self.stats.pool_bytes = sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(
+                (self.cache, self.cushion_block)))
         self.pos = jnp.zeros((self.n_slots,), jnp.int32)
         self.tok = jnp.zeros((self.n_slots,), jnp.int32)
         self.live = np.zeros((self.n_slots,), bool)
         self._slots = [_Slot() for _ in range(self.n_slots)]
 
-    def _shard_cache(self, cache):
+    def _reset_pool_paged(self) -> None:
+        """Build the paged pool: the dense (L, n_slots, max_seq, K, hd) KV
+        leaves become a flat (L, n_pages, ps, K, hd) page store + an
+        (L, n_slots, P) page table; every other leaf (int8 scales, hybrid's
+        Mamba state) keeps its dense per-slot row. The fp cushion block is
+        written ONCE here into batch-free kc/vc leaves — the refcounted,
+        read-only cushion page every slot maps — and never copied again."""
+        shapes = jax.eval_shape(lambda: self._init_cache(self.n_slots))
+        ps = self.page_size
+        pool = {}
+        for key, sd in shapes.items():
+            if key in self._paged_leaves:
+                L, _, _, *rest = sd.shape
+                pool[key] = jnp.zeros((L, self.n_pages, ps, *rest), sd.dtype)
+            elif key not in ("kc", "vc"):
+                pool[key] = jnp.zeros(sd.shape, sd.dtype)
+        cu = {}
+        if self.prefix_len:
+            kvc = self.cushion["kv"]
+            dt = (shapes["kc"].dtype if "kc" in shapes
+                  else pool[self._paged_leaves[0]].dtype)
+            cu = {"kc": jnp.asarray(kvc["k"]).astype(dt),
+                  "vc": jnp.asarray(kvc["v"]).astype(dt)}
+        self._pt_layers = int(pool[self._paged_leaves[0]].shape[0])
+        self._pool = PagePool(self.n_slots, self.max_seq, ps, self.n_pages,
+                              cushion_m=self.prefix_len,
+                              prefix_cache=self._prefix_cache)
+        pool["page_table"] = jnp.zeros(
+            (self._pt_layers, self.n_slots, self._P), jnp.int32)
+        self._pool.dirty = False            # device table == host (all 0)
+        self.cache = self._shard_cache(pool, paged=True)
+        # the shared cushion block lives OUTSIDE self.cache: it is never
+        # passed through a donated jit, so these exact device buffers are
+        # read (never copied, never consumed) by every decode step and
+        # survive every admission/recycle — the "one refcounted, read-only
+        # cushion page". PagePool.gauges() counts its logical refs.
+        self.cushion_block = self._shard_cache(cu, paged=True)
+        self._hpos = np.zeros((self.n_slots,), np.int64)
+
+    def _shard_cache(self, cache, paged: bool = False):
         """Lay a pool (or B=1 admission row) out over the tp mesh along the
         family's cache_roles axes (heads / Mamba channels; see
         models/*.cache_roles). The admission row shares the pool's layout so
-        the slot scatter is shard-local, never a reshard."""
+        the slot scatter is shard-local, never a reshard. The paged pool
+        keeps the KV-heads axis of its page store on "M" (pages replace the
+        batch/seq dims, heads stay sharded: (L, n_pages, ps, K, hd));
+        the page table and the shared cushion block replicate."""
         if self.mesh is None:
             return cache
-        return jax.device_put(cache, SH.cache_shardings(
-            self.api.cache_roles(self.kv_dtype,
-                                 per_slot_scales=self.kv_dtype is not None),
-            cache, self.mesh))
+        roles = self.api.cache_roles(self.kv_dtype,
+                                     per_slot_scales=self.kv_dtype is not None)
+        if paged:
+            roles = dict(roles)
+            for key in self._paged_leaves:
+                r = tuple(roles.get(key, ())) + (None,) * 5
+                # (L,B,S,K,hd) role -> (L,n_pages,ps,K,hd): keep the layer
+                # and heads/head-dim entries, pages/offsets replicate
+                roles[key] = (r[0], None, None, r[3], r[4])
+        return jax.device_put(cache, SH.cache_shardings(roles, cache,
+                                                        self.mesh))
+
+    def _sync_page_table(self) -> None:
+        """Mirror the allocator's host table to the device pool, stacked
+        over the layer axis (decode_step scans the cache layer-wise, so
+        every pool leaf is L-leading; the table itself is identical per
+        layer). Replicated under a mesh — page ids are layout metadata."""
+        pt = np.broadcast_to(self._pool.table[None],
+                             (self._pt_layers,) + self._pool.table.shape)
+        arr = jnp.asarray(pt)
+        if self.mesh is not None:
+            arr = jax.device_put(arr, jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()))
+        cache = dict(self.cache)
+        cache["page_table"] = arr
+        self.cache = cache
+        self._pool.dirty = False
+
+    def _publish_gauges(self) -> None:
+        g = self._pool.gauges()
+        st = self.stats
+        st.pages_total = g["pages_total"]
+        st.pages_free = g["pages_free"]
+        st.pages_shared = g["pages_shared"]
+        st.cushion_page_refs = g["cushion_page_refs"]
+        st.prefix_hits = self._pool.prefix_hits
+        st.prefix_misses = self._pool.prefix_misses
 
     def _positions_needed(self, req: Request) -> int:
         S = req.batch["tokens"].shape[1]
@@ -257,6 +436,8 @@ class ContinuousEngine:
         with SH.use_mesh(self.mesh):
             self._reset_pool()
         self.stats.reset()
+        if self.paged:
+            self._publish_gauges()
         self._results: Dict[int, RequestOutput] = {}
         self._ttft: Dict[int, float] = {}
         self._t0 = time.perf_counter()
@@ -280,14 +461,18 @@ class ContinuousEngine:
         return [s.req for s in self._slots if s.req is not None]
 
     def try_admit(self, req: Request) -> bool:
-        """Admit ``req`` into a free slot (B=1 prefill + full-row scatter).
-        Returns False when no slot is free — queueing and backpressure are
-        the caller's job, the pool itself never buffers."""
+        """Admit ``req`` into a free slot (B=1 prefill + full-row scatter,
+        or the page scatter on a paged pool). Returns False when no slot is
+        free — or, paged, when the page pool can't host the request right
+        now — queueing and backpressure are the caller's job, the pool
+        itself never buffers. Raises ValueError (and counts
+        ``stats.positions_exhausted``) for a request whose prompt+budget
+        can NEVER fit the pool: that's a permanent rejection, not
+        backpressure."""
         free = self.free_slots()
         if not free:
             return False
-        self._admit_request(req, free[0])
-        return True
+        return self._admit_request(req, free[0])
 
     def step(self) -> List[int]:
         """One lock-step decode over the whole pool; retires slots that hit
@@ -295,15 +480,26 @@ class ContinuousEngine:
         are ready in ``pop_finished``). No-op when nothing is live."""
         if not self.live.any():
             return []
+        live_idx = np.flatnonzero(self.live)
+        if self.paged:
+            # map this step's write page for every live slot from its
+            # admission reservation (lazy allocate-on-append), then mirror
+            # any table change to the device before the kernel reads it
+            for slot in live_idx:
+                self._pool.ensure_mapped(int(slot), int(self._hpos[slot]))
+            if self._pool.dirty:
+                self._sync_page_table()
         with SH.use_mesh(self.mesh):
             self.tok, self.pos, self.cache = self._step(
                 self.params, self.tok, self.pos, jnp.asarray(self.live),
-                self.cache)
+                self.cache, self.cushion_block)
+        if self.paged:
+            self._hpos[live_idx] += 1   # mirror the device pos advance
         toks = np.asarray(self.tok)     # the one host sync per step
         self.stats.steps += 1
         self.stats.live_slot_steps += int(self.live.sum())
         retired: List[int] = []
-        for slot in np.flatnonzero(self.live):
+        for slot in live_idx:
             s = self._slots[slot]
             req = s.req
             s.tokens.append(int(toks[slot]))
@@ -325,6 +521,11 @@ class ContinuousEngine:
                 s.req = None
                 self._ttft.pop(uid, None)
                 self.stats.canceled += 1
+                if self.paged:
+                    # return the slot's pages; its frozen-pos dead writes
+                    # land on the scratch page once the table row is zeroed
+                    self._pool.release(slot)
+                    self._publish_gauges()
                 return True
         return False
 
@@ -339,13 +540,20 @@ class ContinuousEngine:
     # Admission / retirement internals
     # ------------------------------------------------------------------
 
-    def _admit_request(self, req: Request, slot: int) -> None:
+    def _admit_request(self, req: Request, slot: int) -> bool:
         need = self._positions_needed(req)
         if self._seq_cache and need > self.max_seq:
+            # permanent rejection (the request can NEVER fit this pool) —
+            # counted explicitly instead of silently running out of
+            # positions mid-decode. run() drops the request; the router
+            # maps the raise to an "invalid" rejection, never a retry.
+            self.stats.positions_exhausted += 1
             raise ValueError(
                 f"request {req.uid} needs {need} positions "
                 f"(prefix {self.prefix_len} + prompt + budget) "
                 f"> pool max_seq {self.max_seq}")
+        if self.paged:
+            return self._admit_request_paged(req, slot, need)
         tpf = time.perf_counter()
         with SH.use_mesh(self.mesh):
             row = self._shard_cache(self._init_cache(1))
@@ -356,6 +564,79 @@ class ContinuousEngine:
                 self.cache, row, jnp.asarray(slot, jnp.int32), self.pos,
                 self.tok, rpos, tok0)
         first = int(jax.block_until_ready(tok0))
+        self._book_admission(req, slot, first, tpf)
+        return True
+
+    def _admit_request_paged(self, req: Request, slot: int,
+                             need: int) -> bool:
+        """Paged admission: claim pages (full reservation — mid-decode
+        exhaustion is impossible), prefill the B=1 row contiguously, then
+        scatter each owned prompt page to its physical page. On a
+        prefix-cache hit the donor's read-only stem pages are mapped
+        (refcount++) and only the tail is prefilled against the extended
+        cushion. Returns False (backpressure) when the page pool can't
+        host the request right now."""
+        prefill_end = need - req.max_new_tokens     # prefix + prompt
+        tokens = None
+        shared: List[int] = []
+        if (self._prefix_cache
+                and not ({"patches", "frames"} & set(req.batch))):
+            tokens = np.asarray(req.batch["tokens"][0])
+            shared = self._pool.lookup_stem(tokens)
+        scatter = self._pool.admit(slot, prefill_end, need, shared=shared)
+        if scatter is None:
+            return False        # page-pool backpressure: retryable
+        tpf = time.perf_counter()
+        ps = self.page_size
+        with SH.use_mesh(self.mesh):
+            row = self._shard_cache(self._init_cache(1))
+            if shared:
+                # extended-cushion tail prefill: the donor's stem pages ARE
+                # the stem's KV (bit-identical — stem hiddens depend only on
+                # cushion+stem), so gather them once and prefill only the
+                # uncovered tail at its true absolute positions
+                c0 = self._pool.c0
+                stem_end = (c0 + len(shared)) * ps
+                donors = jnp.asarray(shared, jnp.int32)
+                kp = self.cache["k"][:, donors]     # (L, h, ps, K, hd)
+                vp = self.cache["v"][:, donors]
+                kp = kp.reshape(kp.shape[0], -1, *kp.shape[3:])
+                vp = vp.reshape(vp.shape[0], -1, *vp.shape[3:])
+                skip = self.prefix_len - c0 * ps    # cushion rows in page c0
+                if self.prefix_len:
+                    kvc = self.cushion["kv"]
+                    cu2 = {"kv": {
+                        "k": jnp.concatenate(
+                            [jnp.asarray(kvc["k"], kp.dtype), kp[:, skip:]],
+                            axis=1),
+                        "v": jnp.concatenate(
+                            [jnp.asarray(kvc["v"], vp.dtype), vp[:, skip:]],
+                            axis=1)}}
+                else:
+                    cu2 = {"kv": {"k": kp, "v": vp}}
+                t_skip = stem_end - self.prefix_len  # prompt tokens covered
+                b2 = dict(req.batch)
+                b2["tokens"] = req.batch["tokens"][:, t_skip:]
+                logits, row, rpos = self._prefill_cu(self.params, b2, row,
+                                                     cu2)
+            else:
+                logits, row, rpos = self._prefill(self.params, req.batch,
+                                                  row)
+            logits = logits[:, -1] if logits.ndim == 3 else logits
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+            self.cache, self.pos, self.tok = self._admit_paged(
+                self.cache, row, jnp.asarray(slot, jnp.int32), self.pos,
+                self.tok, rpos, tok0, jnp.asarray(scatter))
+        first = int(jax.block_until_ready(tok0))
+        if tokens is not None:
+            self._pool.register_stem(slot, tokens, prefill_end)
+        self._hpos[slot] = prefill_end
+        self._book_admission(req, slot, first, tpf)
+        self._publish_gauges()
+        return True
+
+    def _book_admission(self, req: Request, slot: int, first: int,
+                        tpf: float) -> None:
         now = time.perf_counter()
 
         s = self._slots[slot]
@@ -390,6 +671,12 @@ class ContinuousEngine:
         self.live[slot] = False
         s.req = None
         self.stats.finished += 1
+        if self.paged:
+            # retirement RETURNS pages (free list + refcount decrements on
+            # shared donors) instead of re-writing anything; the zeroed
+            # table row routes the dead row's frozen-pos writes to scratch
+            self._pool.release(slot)
+            self._publish_gauges()
 
     # ------------------------------------------------------------------
     # Trace replay
@@ -419,9 +706,18 @@ class ContinuousEngine:
                         break
                 else:
                     now = self.now()
-                    # admit every arrived request that fits a free slot
-                    while (queue and queue[0].arrival_s <= now
-                           and self.try_admit(queue[0])):
+                    # admit every arrived request that fits a free slot;
+                    # requests that can NEVER fit (prompt+budget > capacity)
+                    # are rejected outright — counted in
+                    # stats.positions_exhausted, absent from the results —
+                    # instead of crashing the whole trace
+                    while queue and queue[0].arrival_s <= now:
+                        try:
+                            if not self.try_admit(queue[0]):
+                                break
+                        except ValueError:
+                            queue.popleft()
+                            continue
                         queue.popleft()
                     if not self.live.any():
                         if queue:   # pool idle, next arrival in the future

@@ -287,8 +287,15 @@ def test_budget_validation_and_unsupported_family():
                           cushion=cushion)
     big = Request(uid=0, batch=api.make_batch(jax.random.PRNGKey(0), 1, 100),
                   max_new_tokens=100)
+    # direct admission raises (counted under positions_exhausted)...
     with pytest.raises(ValueError, match="max_seq"):
-        ce.run([big])
+        ce.try_admit(big)
+    assert ce.stats.positions_exhausted == 1
+    # ...while run() rejects the over-capacity request explicitly instead
+    # of crashing the trace (it can never be served, so it is dropped)
+    assert ce.run([big]) == []
+    assert ce.stats.positions_exhausted == 1
+    assert ce.stats.finished == 0
 
     # every registry family now publishes a slot layout; the registry-level
     # contract (a module without CACHE_BATCH_AXES -> clear NotImplemented,
