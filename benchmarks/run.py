@@ -313,6 +313,70 @@ def serve_bench(tp: int = 1):
             f"continuous batching did not beat sequential serving: "
             f"{tps_c:.1f} vs {tps_s:.1f} tok/s")
 
+    if tp == 1:
+        # ------------------------------------------------------------------
+        # Chunked-prefill head-of-line point: one long prompt arrives first
+        # on a high-rate Poisson trace of short interactive requests. With
+        # blocking admission every short behind the long waits out its whole
+        # prefill; with chunked admission shorts admit between the long's
+        # chunks. Gate: p99 arrival->first-token TTFT of the short class
+        # strictly below the blocking baseline, at token-for-token parity.
+        # ------------------------------------------------------------------
+        long_len, short_len, n_long = 448, 32, 2
+        lens = ((long_len,) + (short_len,) * 7) * n_long
+        reqs2 = poisson_trace(api, 1, len(lens), 200.0, lens, (8,))
+        arrivals = {r.uid: r.arrival_s for r in reqs2}
+        short_uids = {r.uid for r in reqs2
+                      if r.batch["tokens"].shape[1] == short_len}
+
+        def arrival_ttft(outs, uids):
+            return np.asarray([o.admitted_s - arrivals[o.uid]
+                               for o in outs if o.uid in uids])
+
+        kw = dict(n_slots=16, max_seq=512, cushion=cushion)
+        blocking = ContinuousEngine(api, params, qcfg, **kw)
+        chunked = ContinuousEngine(api, params, qcfg, chunk_tokens=64, **kw)
+        blocking.run(reqs2)         # warm/compile (incl. per-chunk shapes)
+        chunked.run(reqs2)
+        out_b = blocking.run(reqs2)
+        out_c = chunked.run(reqs2)
+        match2 = all(a.uid == b.uid and np.array_equal(a.tokens, b.tokens)
+                     for a, b in zip(out_b, out_c))
+        p99_b = float(np.percentile(arrival_ttft(out_b, short_uids), 99))
+        p99_c = float(np.percentile(arrival_ttft(out_c, short_uids), 99))
+        all_b = arrival_ttft(out_b, arrivals)
+        all_c = arrival_ttft(out_c, arrivals)
+        emit("serve_chunked_p99_ttft_short_blocking", p99_b * 1e6,
+             f"{n_long}x{long_len}-tok long prompt ahead")
+        emit("serve_chunked_p99_ttft_short_chunked", p99_c * 1e6,
+             f"chunk=64, {chunked.stats.prefill_chunks} chunks, "
+             f"parity={match2}")
+        point2 = {"model": cfg.name, "tp": tp, "mode": "chunked_prefill",
+                  "n_slots": 16, "n_requests": len(lens),
+                  "rate_req_s": 200.0, "chunk_tokens": 64,
+                  "long_prompt_len": long_len, "short_prompt_len": short_len,
+                  "n_long": n_long, "parity_match": match2,
+                  "prefill_chunks": chunked.stats.prefill_chunks,
+                  "p99_ttft_s_short_blocking": p99_b,
+                  "p99_ttft_s_short_chunked": p99_c,
+                  "p50_ttft_s_all_blocking": float(np.percentile(all_b, 50)),
+                  "p99_ttft_s_all_blocking": float(np.percentile(all_b, 99)),
+                  "p50_ttft_s_all_chunked": float(np.percentile(all_c, 50)),
+                  "p99_ttft_s_all_chunked": float(np.percentile(all_c, 99))}
+        with open(os.path.join(out_dir, "BENCH_serve.json")) as f:
+            doc = json.load(f)
+        doc["points"].append(point2)
+        with open(os.path.join(out_dir, "BENCH_serve.json"), "w") as f:
+            json.dump(doc, f, indent=1)
+        if not match2:
+            raise SystemExit("chunked admission diverged from blocking "
+                             "admission (parity oracle failed)")
+        if p99_c >= p99_b:
+            raise SystemExit(
+                f"chunked prefill did not beat blocking admission on "
+                f"short-request p99 TTFT: {p99_c * 1e3:.1f}ms vs "
+                f"{p99_b * 1e3:.1f}ms (head-of-line block not relieved)")
+
 
 def w8a8_bench():
     """Calibrated W8A8 serving bench: fp vs per-tensor-static int8 serving
@@ -365,8 +429,11 @@ def w8a8_bench():
                                 results["w8a8"].tokens))
     emit("w8a8_parity", float(match) * 1e6,
          "prequant tokens == fp-weight pt_static tokens")
+    ttft_ratio = results["w8a8_prequant"].ttft_ms / results["fp"].ttft_ms
+    emit("w8a8_prequant_ttft_ratio", ttft_ratio * 1e6, "prequant/fp TTFT")
     point = {"model": cfg.name, "batch": B, "prompt_len": prompt,
              "n_gen": n_gen, "parity_match": match,
+             "ttft_ratio_prequant_vs_fp": ttft_ratio,
              "weight_bytes_fp": engines["fp"].weight_bytes_fp,
              "weight_bytes_int8_resident":
                  engines["w8a8_prequant"].weight_bytes_int8}
@@ -381,6 +448,17 @@ def w8a8_bench():
         raise SystemExit(
             "int8-resident (prequantized) serving diverged from the "
             "fp-weight pt_static path (parity oracle failed)")
+    # TTFT regression gate: prequantized prefill once ran ~3.9x fp on this
+    # bench (CPU int8 dot_general scalarizes; the kernel path padded ragged
+    # M to the tile). With the tiled ragged-M kernel and the exact f32-GEMM
+    # CPU product, prefill must stay in the same ballpark as fp. The 1.5x
+    # bound leaves room for quantize/dequant overhead but fails the bench
+    # if pad-to-max (or the scalarized int8 product) ever comes back.
+    if ttft_ratio > 1.5:
+        raise SystemExit(
+            f"prequantized TTFT regression: {ttft_ratio:.2f}x fp "
+            f"({results['w8a8_prequant'].ttft_ms:.1f}ms vs "
+            f"{results['fp'].ttft_ms:.1f}ms), gate is 1.5x")
 
 
 def router_bench(replicas: int = 2):

@@ -182,6 +182,35 @@ def _tile(n: int, target: int) -> int:
     return max(t, 1)
 
 
+_F32_EXACT_K = 1024  # 1024 * 128 * 128 == 2**24: f32 partial sums stay exact
+
+
+def _int_product_f32_exact(xq: Array, w_int: Array) -> Array:
+    """Bit-exact int8 x int8 -> int32 product for CPU backends.
+
+    XLA:CPU scalarizes int8 ``dot_general`` (no int8 GEMM in Eigen), which
+    made prequantized *prefill* ~4x slower than fp on the CPU bench. Casting
+    to f32 routes the product through the vectorized f32 GEMM instead, and
+    chunking the contraction at ``_F32_EXACT_K`` keeps it exact: every
+    partial sum is bounded by 1024*128*128 = 2**24, the largest integer
+    magnitude f32 represents exactly, so each chunk's f32 accumulation is
+    integer-exact and the int32 chunk sum matches the int32 dot bit for
+    bit."""
+    K = w_int.shape[0]
+    cdim = xq.ndim - 1
+    xf = xq.astype(jnp.float32)
+    wf = w_int.astype(jnp.float32)
+    acc = None
+    for k0 in range(0, K, _F32_EXACT_K):
+        k1 = min(k0 + _F32_EXACT_K, K)
+        part = jax.lax.dot_general(
+            jax.lax.slice_in_dim(xf, k0, k1, axis=cdim),
+            jax.lax.slice_in_dim(wf, k0, k1, axis=0),
+            (((cdim,), (0,)), ((), ()))).astype(jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
 def _int8_matmul(xq: Array, w_int: Array, s_x, z_x, s_w,
                  colsum: Array, out_dtype) -> Array:
     """Shared int8 x int8 epilogue-fused matmul behind ``true_int_dot`` and
@@ -209,9 +238,12 @@ def _int8_matmul(xq: Array, w_int: Array, s_x, z_x, s_w,
             bm=256, bn=_tile(N, 512), bk=_tile(K, 256),
             interpret=jax.default_backend() != "tpu")
         return out.reshape(*lead, N).astype(out_dtype)
-    acc = jax.lax.dot_general(
-        xq, w_int, (((xq.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    if jax.default_backend() != "tpu":
+        acc = _int_product_f32_exact(xq, w_int)
+    else:
+        acc = jax.lax.dot_general(
+            xq, w_int, (((xq.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
     acc = acc.astype(jnp.float32) - jnp.asarray(z_x, jnp.float32) \
         * colsum.astype(jnp.float32)
     return (acc * (jnp.asarray(s_x, jnp.float32)

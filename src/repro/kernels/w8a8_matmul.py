@@ -46,9 +46,13 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
     """x_int: (M,K) int8; w_int: (K,N) int8; s_x/z_x/s_w scalar fp32.
     Returns fp32 (M,N) = (x - z_x) @ w * s_x * s_w.
 
-    M may be ragged (serving token counts): it is zero-padded up to the
-    tile internally and the output sliced back. K/N are weight dimensions —
-    static per checkpoint — and must tile exactly.
+    M may be ragged (serving token counts): the grid tiles M with a fixed
+    block and the LAST tile is a partial boundary block — Pallas masks its
+    out-of-bounds store rows and pads its out-of-bounds load rows, whose
+    garbage never lands anywhere. No pad-to-max copy of the activations is
+    ever materialized (the old path zero-padded (M,K) up to the tile in
+    HBM, which at prefill sizes cost more than the matmul it fed). K/N are
+    weight dimensions — static per checkpoint — and must tile exactly.
 
     colsum: optional precomputed (N,) int32 column sums of ``w_int`` — the
     prequantized serving path stores them with the int8 weights so the
@@ -56,13 +60,13 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
     M, K = x_int.shape
     K2, N = w_int.shape
     assert K == K2
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bn, bk = min(bn, N), min(bk, K)
     assert N % bn == 0 and K % bk == 0, \
         f"weight dims ({K},{N}) must tile by ({bk},{bn})"
-    Mp = -(-M // bm) * bm
-    if Mp != M:
-        # padded rows compute -z_x*colsum garbage; sliced off before return
-        x_int = jnp.pad(x_int, ((0, Mp - M), (0, 0)))
+    # fixed M tile, sublane-aligned (int8 min tile is (32, 128)): small M
+    # (decode) gets one snug block, large M (prefill) a grid of full tiles
+    # plus one masked boundary block
+    bm = min(bm, -(-M // 32) * 32)
     n_k = K // bk
     if colsum is None:
         colsum = jnp.sum(w_int.astype(jnp.int32), axis=0)   # (N,), tiny
@@ -71,8 +75,8 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
              * jnp.asarray(s_w, jnp.float32)).reshape(1)
     zx = jnp.asarray(z_x, jnp.float32).reshape(1)
 
-    grid = (Mp // bm, N // bn, n_k)
-    out = pl.pallas_call(
+    grid = (-(-M // bm), N // bn, n_k)
+    return pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
@@ -83,8 +87,7 @@ def w8a8_matmul(x_int: jax.Array, w_int: jax.Array, s_x, z_x, s_w,
             pl.BlockSpec((1,), lambda i, j, k: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_int, w_int, colsum, scale, zx)
-    return out[:M] if Mp != M else out

@@ -153,7 +153,11 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
                            prequant=args.prequant,
                            paged=args.paged, page_size=args.page_size,
                            n_pages=args.pages,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           chunk_tokens=args.chunk_tokens)
+    if eng.chunk_tokens:
+        print(f"[serve] chunked prefill: {eng.chunk_tokens} tokens/chunk "
+              f"(budget bucketed from --chunk-tokens {args.chunk_tokens})")
     print(f"[serve] resident weights: "
           f"fp={eng.stats.weight_bytes_fp / 2 ** 20:.1f} MiB "
           f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB")
@@ -238,7 +242,7 @@ def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None):
         kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
         calib_batches=calib_batches, prequant=args.prequant,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens)
     res = router.run(reqs, injector=injector)
     for o in res.outputs:
         retry = f" attempts={o.attempts}" if o.attempts > 1 else ""
@@ -362,9 +366,18 @@ def main(argv=None):
     ap.add_argument("--calib-batches", type=int, default=2,
                     help="pt_static: number of calibration batches drawn "
                          "from the synthetic pipeline at engine load")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked admission prefill: per-step token budget "
+                         "(bucketed to a power of two); prompts longer "
+                         "than one budget prefill one chunk per decode "
+                         "step instead of blocking the whole pool — short "
+                         "prompts admit between a long prompt's chunks")
     ap.add_argument("--bench-json", default=None,
                     help="append a trajectory point to this file")
     args = ap.parse_args(argv)
+    if args.chunk_tokens is not None and args.mode != "continuous":
+        ap.error("--chunk-tokens requires --mode continuous (chunked "
+                 "admission lives in the slot scheduler)")
     if args.prequant and args.quant != "pt_static":
         ap.error("--prequant requires --quant pt_static (int8-resident "
                  "weights serve the per-tensor static deployment path)")

@@ -192,25 +192,41 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig,
 init_cache = T.init_cache
 cushion_zeros = T.cushion_zeros
 write_cushion_to_cache = T.write_cushion_to_cache
+finalize_staged_kv = T.finalize_staged_kv
 cache_roles = T.cache_roles
 placeholder_all_scales = T.placeholder_all_scales
 CACHE_BATCH_AXES = T.CACHE_BATCH_AXES
 PAGED_KV_LEAVES = T.PAGED_KV_LEAVES
+SUPPORTS_CHUNKED_PREFILL = T.SUPPORTS_CHUNKED_PREFILL
 
 
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
             qcfg: QuantConfig, *, scales: Optional[Params] = None,
             cushion: Optional[Params] = None,
             prepend_embeds: Optional[Array] = None,
-            remat: bool = False) -> Tuple[Array, Params, Array]:
+            remat: bool = False,
+            pos_offset: Optional[int] = None) -> Tuple[Array, Params, Array]:
     x = C.embed_tokens(params, tokens, cfg)
     if prepend_embeds is not None:
         x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
     S = x.shape[1]
-    cache, m = write_cushion_to_cache(cache, cushion)
+    if pos_offset is not None:
+        # chunk-resume (see transformer.prefill): read the cushion + earlier
+        # chunks back out of the B=1 fp staging row as the visible prefix
+        if cushion is not None:
+            raise ValueError("chunk-resume prefill attaches the cushion on "
+                             "chunk 0 only (pos_offset excludes cushion)")
+        if "k_scale" in cache or cache["k"].shape[1] != 1:
+            raise ValueError("chunk-resume prefill needs a B=1 fp staging row")
+        m = int(pos_offset)
+        pre = {"k": jax.lax.slice_in_dim(cache["k"], 0, m, axis=2)[:, 0],
+               "v": jax.lax.slice_in_dim(cache["v"], 0, m, axis=2)[:, 0]}
+    else:
+        cache, m = write_cushion_to_cache(cache, cushion)
+        pre = (cushion["kv"] if cushion is not None
+               else _empty_prefix(cfg, x.dtype))
     positions = m + jnp.arange(S)
     lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
-    pre = cushion["kv"] if cushion is not None else _empty_prefix(cfg, x.dtype)
 
     def body(h, xs):
         lp, lsc, lpre = xs

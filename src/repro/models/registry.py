@@ -127,6 +127,20 @@ class ModelAPI:
         recurrent state, encdec's per-request cross-KV)."""
         return tuple(getattr(self.mod, "PAGED_KV_LEAVES", ()))
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when prefill() accepts pos_offset to resume a partially
+        staged B=1 fp row (chunked admission). Families whose prompt pass
+        is not a pure causal attention-KV scan (ssm, encdec, hybrid's Mamba
+        leaves, vlm's patch prepend) admit blocking instead."""
+        return bool(getattr(self.mod, "SUPPORTS_CHUNKED_PREFILL", False))
+
+    def finalize_staged_kv(self, row, cache, cushion, S: int):
+        """Rebuild the admission row a blocking prefill would have produced
+        from a finished chunk-staged fp row (int8 pools recalibrate their
+        per-slot scales over the whole prompt here)."""
+        return self.mod.finalize_staged_kv(row, cache, cushion, S)
+
     def cushion_zeros(self, m: int, dtype=jnp.float32):
         return self.mod.cushion_zeros(self.cfg, m, dtype=dtype)
 

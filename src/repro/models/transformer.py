@@ -34,6 +34,14 @@ SITES = C.ATTN_SITES + C.MLP_SITES  # ("qkv", "o", "mlp_in", "down")
 # against the cached block (ModelAPI.score_candidates).
 SUPPORTS_PREFIX_KV_SCORING = True
 
+# prefill() accepts pos_offset to resume a partially-written fp cache row:
+# the scheduler's chunked admission replays a prompt chunk-by-chunk, reading
+# everything before the chunk (cushion included) back out of the row as the
+# fully-visible prefix. Families whose prompt pass is not a pure causal
+# attention-KV scan (ssm state, encdec cross-KV, vlm patch prepend) stay on
+# blocking admission.
+SUPPORTS_CHUNKED_PREFILL = True
+
 # Continuous-batching slot layout: batch axis of every per-request cache
 # leaf (init_cache puts batch second, after the layer axis). The scheduler
 # scatters a B=1 prefilled cache row into its slot along these axes and
@@ -248,24 +256,61 @@ def write_prompt_kv(cache: Params, ks: Array, vs: Array, m: int) -> Params:
     return cache
 
 
+def finalize_staged_kv(row: Params, cache: Params, cushion: Optional[Params],
+                       S: int) -> Params:
+    """Rebuild the admission row a *blocking* prefill would have produced
+    from a chunk-staged fp row: slice the prompt KV [m:m+S) back out of the
+    staging row and write it through the normal write_prompt_kv path, so an
+    int8 cache calibrates its per-slot dequant scales from the WHOLE prompt
+    (not per chunk — bit-identical to blocking admission) and the protected
+    fp cushion block lands in kc/vc untouched."""
+    cache, m = write_cushion_to_cache(cache, cushion)
+    ks = jax.lax.slice_in_dim(row["k"], m, m + S, axis=2)
+    vs = jax.lax.slice_in_dim(row["v"], m, m + S, axis=2)
+    return write_prompt_kv(cache, ks, vs, m)
+
+
 def prefill(params: Params, tokens: Array, cache: Params, cfg: ModelConfig,
             qcfg: QuantConfig, *, scales: Optional[Params] = None,
             cushion: Optional[Params] = None,
             prepend_embeds: Optional[Array] = None,
-            remat: bool = False) -> Tuple[Array, Params, Array]:
+            remat: bool = False,
+            pos_offset: Optional[int] = None) -> Tuple[Array, Params, Array]:
     """Process the prompt, fill the KV cache (cushion at [0:m], prompt at
-    [m:m+S]). Returns (last-position logits, cache, next_pos)."""
+    [m:m+S]). Returns (last-position logits, cache, next_pos).
+
+    pos_offset (static int) resumes a chunked prefill: positions [0:pos_offset)
+    of the B=1 fp cache row already hold the cushion plus every earlier chunk
+    (written by a previous prefill call on the same row), and are read back as
+    the fully-visible prefix for this chunk's tokens. The cushion must NOT be
+    re-attached (chunk 0 only), and the row must be fp — int8 admission rows
+    are rebuilt from the finished staging row by finalize_staged_kv so the
+    per-slot scales still calibrate over the whole prompt."""
     x = C.embed_tokens(params, tokens, cfg)
     if prepend_embeds is not None:
         x = jnp.concatenate([prepend_embeds.astype(x.dtype), x], axis=1)
     S = x.shape[1]
-    cache, m = write_cushion_to_cache(cache, cushion)
+    if pos_offset is not None:
+        if cushion is not None:
+            raise ValueError("chunk-resume prefill attaches the cushion on "
+                             "chunk 0 only (pos_offset excludes cushion)")
+        if "k_scale" in cache:
+            raise ValueError("chunk-resume prefill needs an fp staging row")
+        if cache["k"].shape[1] != 1:
+            raise ValueError("chunk-resume prefill is B=1 only")
+        m = int(pos_offset)
+        pre = {"k": jax.lax.slice_in_dim(cache["k"], 0, m, axis=2)[:, 0],
+               "v": jax.lax.slice_in_dim(cache["v"], 0, m, axis=2)[:, 0]}
+    else:
+        cache, m = write_cushion_to_cache(cache, cushion)
+        pre = cushion["kv"] if cushion is not None else {
+            "k": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim),
+                           x.dtype),
+            "v": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim),
+                           x.dtype)}
     positions = m + jnp.arange(S)
 
     lscales = C.resolve_scales(scales, SITES, cfg.n_layers, qcfg)
-    pre = cushion["kv"] if cushion is not None else {
-        "k": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype),
-        "v": jnp.zeros((cfg.n_layers, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)}
 
     def body(h, xs):
         lp, lsc, lpre = xs

@@ -133,6 +133,9 @@ class ServeStats:
     prefix_hits: int = 0        # admissions that mapped cached stem pages
     prefix_misses: int = 0      # eligible admissions with no cached stem
     positions_exhausted: int = 0  # requests rejected: prompt+budget > pool
+    prefill_chunks: int = 0     # chunked-admission prefill chunks run
+    deadline_prefill: int = 0   # streams aborted between chunks (deadline)
+    page_table_syncs: int = 0   # host->device page-table mirrors (paged)
 
     def reset(self) -> None:
         """Zero every per-run counter, keeping ``n_slots``, the resident
@@ -148,6 +151,8 @@ class ServeStats:
         self.pages_free = self.pages_shared = self.cushion_page_refs = 0
         self.prefix_hits = self.prefix_misses = 0
         self.positions_exhausted = 0
+        self.prefill_chunks = self.deadline_prefill = 0
+        self.page_table_syncs = 0
 
     def occupancy(self) -> float:
         return self.live_slot_steps / max(1, self.steps * self.n_slots)

@@ -137,18 +137,19 @@ class PagePool:
         for i, page in enumerate(shared):
             self.table[slot, first + i] = page
             self.refs[page] += 1
+            self.dirty = True
         for c in range(first + len(shared), prompt_last):
             page = self.free.pop()
             self.refs[page] = 1
             self.table[slot, c] = page
             scatter[c] = page
+            self.dirty = True
         self.reserved += reserve
         self._slot_reserved[slot] = reserve
         self._slot_next[slot] = prompt_last
         self._slot_limit[slot] = limit
         if self.m:
             self.cushion_slots += 1
-        self.dirty = True
         return scatter
 
     def ensure_mapped(self, slot: int, pos: int) -> None:
@@ -173,16 +174,23 @@ class PagePool:
         (shared donors survive until their last reader and any cache
         reference go), drop the unused reservation, zero the table row so
         the slot's frozen-pos dead writes land on scratch."""
-        for c in np.flatnonzero(self.table[slot]):
+        mapped = np.flatnonzero(self.table[slot])
+        if not mapped.size:
+            # never admitted (or already released): a true no-op — no
+            # mutation, so no device-mirror dirtying, no gauge movement
+            assert not self._slot_reserved[slot], \
+                "reservation outstanding on a slot with no mapped pages"
+            return
+        for c in mapped:
             self._unref(int(self.table[slot, c]))
         self.table[slot] = 0
+        self.dirty = True
         self.reserved -= int(self._slot_reserved[slot])
         self._slot_reserved[slot] = 0
         self._slot_next[slot] = 0
         self._slot_limit[slot] = 0
         if self.m:
             self.cushion_slots -= 1
-        self.dirty = True
 
     def _unref(self, page: int) -> None:
         self.refs[page] -= 1

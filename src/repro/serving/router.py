@@ -276,6 +276,7 @@ class ReplicaRouter:
         rep.dead_handled = True
         self.stats.replica_deaths += 1
         self._collect_replica(rep, now, outputs)    # finished work is valid
+        self._harvest_expired(rep, rejected)        # so are its expirations
         for req in list(rep.engine.live_requests()):
             entry, _ = self._inflight.pop(req.uid, (None, None))
             rep.engine.cancel(req.uid)
@@ -295,7 +296,8 @@ class ReplicaRouter:
             if st == DEAD or not rep.engine.free_slots():
                 continue
             ranked.append((0 if st == HEALTHY else 1,
-                           rep.engine.live_count, rep.idx, rep))
+                           rep.engine.live_count + rep.engine.prefilling,
+                           rep.idx, rep))
         return min(ranked)[3] if ranked else None
 
     # ------------------------------------------------------------------
@@ -386,15 +388,30 @@ class ReplicaRouter:
                                beat=not rep.heartbeat_suppressed)
 
     def _expire_live(self, now: float, rejected: List[Rejected]) -> None:
-        """Cancel live requests whose deadline passed mid-decode."""
+        """Cancel live requests whose deadline passed mid-decode.
+        PREFILLING streams are left alone: the engine enforces their
+        deadline between chunks itself, and ``_harvest_expired`` maps those
+        to ``deadline-prefill`` so the rejection reason says which phase
+        blew the budget."""
         for uid in list(self._inflight):
             entry, rep = self._inflight[uid]
             if (entry.req.deadline_s is not None
                     and now > entry.req.deadline_s):
+                if rep.engine.is_prefilling(uid):
+                    continue
                 if rep.engine.cancel(uid):      # still decoding: cut it
                     del self._inflight[uid]
                     rejected.append(self._reject(uid, "deadline-decoding"))
                 # else: already finished, result collected normally
+
+    def _harvest_expired(self, rep: _Replica,
+                         rejected: List[Rejected]) -> None:
+        """Collect uids the engine retired *between prefill chunks* for
+        blowing their deadline (chunked admission). No result exists;
+        clearing the inflight entry here is what lets ``run()`` terminate."""
+        for uid in rep.engine.pop_expired():
+            self._inflight.pop(uid, None)
+            rejected.append(self._reject(uid, "deadline-prefill"))
 
     def _collect_replica(self, rep: _Replica, now: float,
                          outputs: Dict[int, RoutedOutput]) -> None:
@@ -469,13 +486,15 @@ class ReplicaRouter:
                                            or "health: " + rep.state(now),
                                            rejected, outputs)
                         continue
-                    if rep.engine.live_count == 0:
+                    if rep.engine.live_count == 0 \
+                            and rep.engine.prefilling == 0:
                         continue
                     self._step_replica(rep, now, injector, rejected, outputs)
                     stepped = True
                 now = self.now()
                 self._expire_live(now, rejected)
                 for rep in self.replicas:
+                    self._harvest_expired(rep, rejected)
                     self._collect_replica(rep, now, outputs)
                 if not stepped and (pending or self._queue):
                     # idle: wait out backoff gates / future arrivals

@@ -86,6 +86,27 @@ donor's pages read-only (refcount++) and prefills only the tail against
 an extended cushion — pages are write-once, so copy-on-write degenerates
 to copy-never.
 
+Chunked prefill (``chunk_tokens``): blocking admission runs the whole B=1
+prompt prefill inline, so one long prompt stalls every live decode slot —
+the p99 killer under heavy traffic. With a per-step chunk budget set
+(power-of-two bucketed, min 8), a prompt longer than one budget becomes a
+PREFILLING *stream* instead: the slot (and, paged, the full page
+reservation) is claimed up front, and the prompt is replayed one chunk per
+``step()`` — round-robin across streams — into a B=1 fp staging row,
+interleaved with the pool's lock-step decode. Chunk 0 attaches the cushion
+(or the prefix-cache extended cushion); later chunks resume with a static
+``pos_offset``, reading the cushion + earlier chunks back out of the row
+as the fully-visible prefix. Only the final chunk touches the pool, via
+the SAME admit scatter as blocking admission (int8 pools requantize the
+finished fp row in one shot so per-slot scales still calibrate over the
+whole prompt) — chunked admission is therefore token-for-token identical
+to blocking, it just stops starving decode (smooth TPOT) and stops
+head-of-line blocking short prompts behind long ones (p99 TTFT).
+Deadlines are enforced between chunks: an expired stream frees its slot
+without a result (``stats.deadline_prefill``; the router drains the uids
+via ``pop_expired``). Families whose prompt pass is not a pure causal
+attention-KV scan (ssm, encdec, vlm, hybrid) keep blocking admission.
+
 Scope: greedy decoding for every registry family with a
 ``CACHE_BATCH_AXES`` slot layout — dense / moe / vlm / hybrid (KV pools,
 int8-capable) plus ssm and encdec (fp state/KV pools; no paged mode —
@@ -108,8 +129,8 @@ from repro.configs.base import QuantConfig
 from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
 from repro.monitoring import ServeStats, resident_weight_bytes
-from repro.serving.engine import (cache_seq_len, cushion_prefix_len,
-                                  plan_quantization,
+from repro.serving.engine import (bucket_steps, cache_seq_len,
+                                  cushion_prefix_len, plan_quantization,
                                   shard_params_for_serving)
 from repro.serving.paging import PagePool
 
@@ -153,6 +174,38 @@ class _Slot:
         self.used = False       # has ever held a request (recycle counter)
 
 
+class _PrefillStream:
+    """A partially-admitted request (the PREFILLING slot state): its prompt
+    is replayed chunk-by-chunk into a B=1 fp staging row between decode
+    steps. The slot (and, paged, the full page reservation) is claimed at
+    stream start; the pool itself is only touched once, at finalize, by the
+    same admit scatter the blocking path uses — so a chunked admission is
+    token-for-token identical to a blocking one."""
+    __slots__ = ("req", "slot", "row", "toks", "base", "shared", "scatter",
+                 "stem_tokens", "prefill_end", "tpf", "done", "logits",
+                 "rpos")
+
+    def __init__(self, req: Request, slot: int, row, toks, base: int,
+                 shared, scatter, stem_tokens, prefill_end: int) -> None:
+        self.req = req
+        self.slot = slot
+        self.row = row              # B=1 fp staging cache
+        self.toks = toks            # (1, total) prompt tokens (stem-trimmed)
+        self.base = base            # chunk 0 position origin (prefix / stem)
+        self.shared = shared        # prefix-cache donor pages (chunk 0)
+        self.scatter = scatter      # paged admission scatter vector
+        self.stem_tokens = stem_tokens
+        self.prefill_end = prefill_end
+        self.tpf = time.perf_counter()
+        self.done = 0               # prompt tokens prefilled so far
+        self.logits = None          # last chunk's logits (first token)
+        self.rpos = None
+
+    @property
+    def total(self) -> int:
+        return int(self.toks.shape[1])
+
+
 def _scatter_row(dst, src, spec, slot):
     """Write a B=1 admission row into pool slot ``slot``. ``spec`` is the
     family's batch-axis entry: an int (flat cache leaf) or a nested dict
@@ -174,7 +227,8 @@ class ContinuousEngine:
                  mesh=None, kv_dtype=None, calib_batches=None,
                  prequant: bool = False, paged: bool = False,
                  page_size: int = 64, n_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 chunk_tokens: Optional[int] = None):
         self.api = api
         self.mesh = mesh
         params, scales = plan_quantization(
@@ -250,6 +304,30 @@ class ContinuousEngine:
         self._prefill_cu = jax.jit(
             lambda p, b, c, cu: api.prefill(p, b, c, qcfg, cushion=cu,
                                             scales=scales))
+        # chunked admission: chunk k>0 replays tokens [done:done+c) on the
+        # B=1 fp staging row with a static pos_offset — the cushion and all
+        # earlier chunks are read back out of the row as the visible prefix.
+        # One compile per (pos_offset, chunk shape) pair, the same profile
+        # as the prefix-cache tail path above.
+        self._prefill_re = jax.jit(
+            lambda p, b, c, po: api.prefill(p, b, c, qcfg, scales=scales,
+                                            pos_offset=po),
+            static_argnums=(3,))
+        self._finalize_int8 = jax.jit(
+            lambda row, S: api.finalize_staged_kv(
+                row, self._init_cache(1), cushion, S),
+            static_argnums=(1,))
+        self.chunk_tokens: Optional[int] = None
+        if chunk_tokens is not None:
+            if chunk_tokens < 1:
+                raise ValueError(f"chunk_tokens {chunk_tokens} must be >= 1")
+            # the per-step prefill token budget, bucketed to the power-of-
+            # two family (min 8, PR 2's bucketing) so chunk executables are
+            # shared across prompt lengths; prompts at or under one budget
+            # admit blocking (a stream would only add staging overhead).
+            # Families without chunk-resumable prefill (ssm, encdec, vlm,
+            # hybrid) silently keep blocking admission.
+            self.chunk_tokens = bucket_steps(int(chunk_tokens))
 
         def admit(cache, row, slot, pos, tok, rpos, tok0):
             cache = dict(cache)
@@ -318,6 +396,19 @@ class ContinuousEngine:
                                    kv_dtype=self.kv_dtype,
                                    prefix_len=self.prefix_len,
                                    per_slot_scales=self.kv_dtype is not None)
+
+    def _staging_row(self):
+        """B=1 fp staging row for chunked admission. int8 pools stage fp
+        too: finalize_staged_kv requantizes the finished row in one shot so
+        the per-slot dequant scales calibrate over the WHOLE prompt, exactly
+        like a blocking admission prefill."""
+        if self.kv_dtype is None:
+            return self._shard_cache(self._init_cache(1))
+        row = self.api.init_cache(1, self.max_seq)
+        if self.mesh is None:
+            return row
+        return jax.device_put(row, SH.cache_shardings(
+            self.api.cache_roles(None), row, self.mesh))
 
     def _reset_pool(self) -> None:
         if self.paged:
@@ -409,6 +500,7 @@ class ContinuousEngine:
         cache["page_table"] = arr
         self.cache = cache
         self._pool.dirty = False
+        self.stats.page_table_syncs += 1
 
     def _publish_gauges(self) -> None:
         g = self._pool.gauges()
@@ -440,6 +532,8 @@ class ContinuousEngine:
             self._publish_gauges()
         self._results: Dict[int, RequestOutput] = {}
         self._ttft: Dict[int, float] = {}
+        self._streams: collections.deque = collections.deque()
+        self._expired: List[int] = []
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -455,9 +549,30 @@ class ContinuousEngine:
     def live_count(self) -> int:
         return int(self.live.sum())
 
+    @property
+    def prefilling(self) -> int:
+        """Admission streams currently mid-prefill (PREFILLING slots). The
+        router must keep stepping an engine whose only work is a stream."""
+        return len(self._streams)
+
+    def is_prefilling(self, uid: int) -> bool:
+        """True while ``uid`` is a PREFILLING slot (partially-admitted).
+        The engine itself enforces deadlines between chunks for these
+        (``pop_expired``); the router leaves them out of its mid-decode
+        deadline sweep so the rejection reason stays ``deadline-prefill``."""
+        return any(st.req.uid == uid for st in self._streams)
+
+    def pop_expired(self) -> List[int]:
+        """Drain uids of streams retired between chunks for blowing their
+        deadline (no result was produced; the router maps these to
+        ``deadline-prefill`` rejections and clears its inflight entry)."""
+        out, self._expired = self._expired, []
+        return out
+
     def live_requests(self) -> List[Request]:
-        """Requests currently occupying a slot (the router fails these over
-        to surviving replicas when this engine dies)."""
+        """Requests currently occupying a slot — live decoders AND
+        partially-prefilled streams (the router fails these over to
+        surviving replicas when this engine dies)."""
         return [s.req for s in self._slots if s.req is not None]
 
     def try_admit(self, req: Request) -> bool:
@@ -468,16 +583,32 @@ class ContinuousEngine:
         itself never buffers. Raises ValueError (and counts
         ``stats.positions_exhausted``) for a request whose prompt+budget
         can NEVER fit the pool: that's a permanent rejection, not
-        backpressure."""
+        backpressure.
+
+        With ``chunk_tokens`` set (and a chunk-capable family), a prompt
+        longer than one chunk budget starts a PREFILLING stream instead of
+        prefilling here: the slot (and pages) are claimed now, the prompt
+        is replayed one chunk per ``step()`` between decodes, and the pool
+        admit happens at the final chunk — True means the request is this
+        engine's responsibility either way."""
         free = self.free_slots()
         if not free:
             return False
+        if (self.chunk_tokens is not None
+                and self.api.supports_chunked_prefill
+                and not ({"patches", "frames"} & set(req.batch))
+                and req.batch["tokens"].shape[1] > self.chunk_tokens):
+            return self._start_stream(req, free[0])
         return self._admit_request(req, free[0])
 
     def step(self) -> List[int]:
-        """One lock-step decode over the whole pool; retires slots that hit
-        EOS or budget. Returns the uids retired this step (their outputs
-        are ready in ``pop_finished``). No-op when nothing is live."""
+        """Runs one prefill chunk of the oldest pending admission stream
+        (chunked admission; no-op without streams), then one lock-step
+        decode over the whole pool, retiring slots that hit EOS or budget.
+        Returns the uids retired by the decode (their outputs are ready in
+        ``pop_finished``). No-op when nothing is live or prefilling."""
+        if self._streams:
+            self._advance_stream()
         if not self.live.any():
             return []
         live_idx = np.flatnonzero(self.live)
@@ -514,7 +645,15 @@ class ContinuousEngine:
         """Free the slot holding ``uid`` without producing a result
         (deadline expiry mid-decode, failover bookkeeping). The slot's
         stale KV needs no scrubbing: the next admission's full-row scatter
-        overwrites it. Returns False if ``uid`` is not live here."""
+        overwrites it. A PREFILLING stream is dropped the same way (its
+        staged row is discarded, its page reservation returned). Returns
+        False if ``uid`` is not live here."""
+        for st in self._streams:
+            if st.req.uid == uid:
+                self._streams.remove(st)
+                self.stats.canceled += 1
+                self._abort_stream(st, expired=False)
+                return True
         for slot, s in enumerate(self._slots):
             if s.req is not None and s.req.uid == uid:
                 self.live[slot] = False
@@ -540,7 +679,7 @@ class ContinuousEngine:
     # Admission / retirement internals
     # ------------------------------------------------------------------
 
-    def _admit_request(self, req: Request, slot: int) -> bool:
+    def _check_capacity(self, req: Request) -> int:
         need = self._positions_needed(req)
         if self._seq_cache and need > self.max_seq:
             # permanent rejection (the request can NEVER fit this pool) —
@@ -552,6 +691,10 @@ class ContinuousEngine:
                 f"request {req.uid} needs {need} positions "
                 f"(prefix {self.prefix_len} + prompt + budget) "
                 f"> pool max_seq {self.max_seq}")
+        return need
+
+    def _admit_request(self, req: Request, slot: int) -> bool:
+        need = self._check_capacity(req)
         if self.paged:
             return self._admit_request_paged(req, slot, need)
         tpf = time.perf_counter()
@@ -587,7 +730,6 @@ class ContinuousEngine:
         if scatter is None:
             return False        # page-pool backpressure: retryable
         tpf = time.perf_counter()
-        ps = self.page_size
         with SH.use_mesh(self.mesh):
             row = self._shard_cache(self._init_cache(1))
             if shared:
@@ -595,25 +737,8 @@ class ContinuousEngine:
                 # the stem's KV (bit-identical — stem hiddens depend only on
                 # cushion+stem), so gather them once and prefill only the
                 # uncovered tail at its true absolute positions
-                c0 = self._pool.c0
-                stem_end = (c0 + len(shared)) * ps
-                donors = jnp.asarray(shared, jnp.int32)
-                kp = self.cache["k"][:, donors]     # (L, h, ps, K, hd)
-                vp = self.cache["v"][:, donors]
-                kp = kp.reshape(kp.shape[0], -1, *kp.shape[3:])
-                vp = vp.reshape(vp.shape[0], -1, *vp.shape[3:])
-                skip = self.prefix_len - c0 * ps    # cushion rows in page c0
-                if self.prefix_len:
-                    kvc = self.cushion["kv"]
-                    cu2 = {"kv": {
-                        "k": jnp.concatenate(
-                            [jnp.asarray(kvc["k"], kp.dtype), kp[:, skip:]],
-                            axis=1),
-                        "v": jnp.concatenate(
-                            [jnp.asarray(kvc["v"], vp.dtype), vp[:, skip:]],
-                            axis=1)}}
-                else:
-                    cu2 = {"kv": {"k": kp, "v": vp}}
+                stem_end = (self._pool.c0 + len(shared)) * self.page_size
+                cu2 = self._stem_cushion(shared)
                 t_skip = stem_end - self.prefix_len  # prompt tokens covered
                 b2 = dict(req.batch)
                 b2["tokens"] = req.batch["tokens"][:, t_skip:]
@@ -634,6 +759,137 @@ class ContinuousEngine:
         self._book_admission(req, slot, first, tpf)
         self._publish_gauges()
         return True
+
+    def _stem_cushion(self, shared: List[int]):
+        """Extended cushion for a prefix-cache hit: the real cushion KV
+        concatenated with the donor stem pages gathered from the page store
+        (skipping the cushion rows that share the stem's first page)."""
+        ps = self.page_size
+        c0 = self._pool.c0
+        donors = jnp.asarray(shared, jnp.int32)
+        kp = self.cache["k"][:, donors]             # (L, h, ps, K, hd)
+        vp = self.cache["v"][:, donors]
+        kp = kp.reshape(kp.shape[0], -1, *kp.shape[3:])
+        vp = vp.reshape(vp.shape[0], -1, *vp.shape[3:])
+        skip = self.prefix_len - c0 * ps            # cushion rows in page c0
+        if self.prefix_len:
+            kvc = self.cushion["kv"]
+            return {"kv": {
+                "k": jnp.concatenate(
+                    [jnp.asarray(kvc["k"], kp.dtype), kp[:, skip:]], axis=1),
+                "v": jnp.concatenate(
+                    [jnp.asarray(kvc["v"], vp.dtype), vp[:, skip:]], axis=1)}}
+        return {"kv": {"k": kp, "v": vp}}
+
+    # ------------------------------------------------------------------
+    # Chunked admission (PREFILLING streams)
+    # ------------------------------------------------------------------
+
+    def _start_stream(self, req: Request, slot: int) -> bool:
+        """Claim a slot (and, paged, the full page reservation — admission
+        backpressure is decided up front, exactly like blocking) and queue
+        the prompt for chunk-by-chunk prefill. Nothing touches the pool
+        until the final chunk's admit scatter."""
+        need = self._check_capacity(req)
+        prefill_end = need - req.max_new_tokens     # prefix + prompt
+        scatter = None
+        shared: List[int] = []
+        stem_tokens = None
+        if self.paged:
+            if self._prefix_cache:
+                stem_tokens = np.asarray(req.batch["tokens"][0])
+                shared = self._pool.lookup_stem(stem_tokens)
+            scatter = self._pool.admit(slot, prefill_end, need, shared=shared)
+            if scatter is None:
+                return False    # page-pool backpressure: retryable
+        toks = req.batch["tokens"]
+        base = self.prefix_len
+        if shared:
+            # donor pages cover the stem; only the uncovered tail is chunked
+            base = (self._pool.c0 + len(shared)) * self.page_size
+            toks = toks[:, base - self.prefix_len:]
+        with SH.use_mesh(self.mesh):
+            row = self._staging_row()
+        self._slots[slot].req = req     # PREFILLING: slot held, not live
+        self._streams.append(_PrefillStream(req, slot, row, toks, base,
+                                            shared, scatter, stem_tokens,
+                                            prefill_end))
+        return True
+
+    def _advance_stream(self) -> None:
+        """Run ONE prefill chunk (the per-step token budget) of the oldest
+        pending stream, round-robin across streams so short prompts aren't
+        head-of-line blocked behind a long one; finalize when the prompt is
+        exhausted. Deadlines are enforced between chunks: an expired stream
+        frees its slot (and pages) without a result."""
+        st = self._streams.popleft()
+        req = st.req
+        if req.deadline_s is not None and self.now() > req.deadline_s:
+            self._abort_stream(st, expired=True)
+            return
+        c = min(self.chunk_tokens, st.total - st.done)
+        chunk = st.toks[:, st.done:st.done + c]
+        with SH.use_mesh(self.mesh):
+            if st.done == 0:
+                b0 = dict(req.batch)
+                b0["tokens"] = chunk
+                if st.shared:
+                    st.logits, st.row, st.rpos = self._prefill_cu(
+                        self.params, b0, st.row, self._stem_cushion(st.shared))
+                else:
+                    st.logits, st.row, st.rpos = self._prefill(
+                        self.params, b0, st.row)
+            else:
+                st.logits, st.row, st.rpos = self._prefill_re(
+                    self.params, {"tokens": chunk}, st.row,
+                    st.base + st.done)
+        st.done += c
+        self.stats.prefill_chunks += 1
+        if st.done < st.total:
+            self._streams.append(st)
+        else:
+            self._finalize_stream(st)
+
+    def _finalize_stream(self, st: _PrefillStream) -> None:
+        """Admit the finished staging row into the pool — the SAME admit
+        scatter (and, int8, the same whole-prompt scale calibration) as the
+        blocking path, so chunked and blocking admissions are
+        token-for-token identical from the pool's point of view."""
+        req, slot = st.req, st.slot
+        with SH.use_mesh(self.mesh):
+            logits = st.logits[:, -1] if st.logits.ndim == 3 else st.logits
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+            row = st.row
+            if self.kv_dtype is not None:
+                row = self._finalize_int8(row, st.total)
+            sl = jnp.asarray(slot, jnp.int32)
+            if self.paged:
+                self.cache, self.pos, self.tok = self._admit_paged(
+                    self.cache, row, sl, self.pos, self.tok, st.rpos, tok0,
+                    jnp.asarray(st.scatter))
+            else:
+                self.cache, self.pos, self.tok = self._admit(
+                    self.cache, row, sl, self.pos, self.tok, st.rpos, tok0)
+        first = int(jax.block_until_ready(tok0))
+        if st.stem_tokens is not None:
+            self._pool.register_stem(slot, st.stem_tokens, st.prefill_end)
+        if self.paged:
+            self._hpos[slot] = st.prefill_end
+        self._book_admission(req, slot, first, st.tpf)
+        if self.paged:
+            self._publish_gauges()
+
+    def _abort_stream(self, st: _PrefillStream, expired: bool) -> None:
+        """Drop a PREFILLING stream without a result (deadline blown
+        between chunks, cancel, drain): free the slot, return the page
+        reservation, discard the staged row."""
+        self._slots[st.slot].req = None
+        if self.paged:
+            self._pool.release(st.slot)
+            self._publish_gauges()
+        if expired:
+            self.stats.deadline_prefill += 1
+            self._expired.append(st.req.uid)
 
     def _book_admission(self, req: Request, slot: int, first: int,
                         tpf: float) -> None:
@@ -699,9 +955,14 @@ class ContinuousEngine:
         done: Dict[int, RequestOutput] = {}
         draining = False
 
-        while queue or self.live.any():
+        while queue or self.live.any() or self._streams:
             try:
                 if draining:
+                    # partial admissions are unfinished work, dropped like
+                    # the queued remainder (their slots/pages come back)
+                    while self._streams:
+                        self._abort_stream(self._streams.popleft(),
+                                           expired=False)
                     if not self.live.any():
                         break
                 else:
@@ -719,7 +980,7 @@ class ContinuousEngine:
                             queue.popleft()
                             continue
                         queue.popleft()
-                    if not self.live.any():
+                    if not self.live.any() and not self._streams:
                         if queue:   # pool idle, next arrival in the future
                             time.sleep(min(1e-3, max(
                                 0.0, queue[0].arrival_s - self.now())))

@@ -204,6 +204,44 @@ def test_paged_scheduler_matches_engine(kv_dtype):
     assert g.cushion_page_refs == 1     # pool's pinned ref, no live slots
 
 
+def test_page_table_syncs_flat_during_pure_decode():
+    """The host->device page-table mirror runs only on actual table
+    mutation: across a pure-decode window inside one page (no new
+    mappings, no admissions, no releases) the ``page_table_syncs`` gauge
+    stays flat, and crossing a page boundary costs exactly one sync —
+    not one per step. Releasing an already-empty row is not a mutation."""
+    api, params, cushion = _setup()
+    ce = ContinuousEngine(api, params, QN, n_slots=3, max_seq=256,
+                          cushion=cushion, paged=True, page_size=64)
+    ce.start()
+    for uid in range(2):
+        assert ce.try_admit(Request(
+            uid=uid, batch=api.make_batch(jax.random.PRNGKey(uid), 1, 20),
+            max_new_tokens=50))
+    ce.step()           # flushes the admission mutations
+    base = ce.stats.page_table_syncs
+    assert base >= 1
+    # positions 24.. stay inside page 0 (64 positions) for many steps
+    for _ in range(10):
+        ce.step()
+    assert ce.stats.page_table_syncs == base, \
+        "pure-decode steps inside a mapped page must not re-sync the table"
+    # decode up to the page-0/page-1 boundary: exactly one more sync for
+    # the window that maps the new page (both slots map it the same step)
+    while int(ce._hpos.max()) < 64:
+        ce.step()
+    ce.step()
+    assert ce.stats.page_table_syncs == base + 1, \
+        "a page-boundary crossing costs one sync, not one per step"
+    # releasing a never-admitted row is a no-op: no dirty, no gauge drift
+    assert not ce._pool.dirty
+    gauges_before = ce._pool.gauges()
+    ce._pool.release(ce.n_slots - 1)        # slot 2 never held a request
+    assert not ce._pool.dirty, \
+        "empty-row release must not mark the table dirty"
+    assert ce._pool.gauges() == gauges_before
+
+
 def test_recycle_never_copies_cushion_block():
     """The refcounted cushion lives once, batch-free, outside the page
     store: admission, decode, retirement and re-admission into the recycled

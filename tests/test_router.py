@@ -252,6 +252,58 @@ def test_deadline_expires_mid_queue(router):
         [(3, "deadline-queued")]
 
 
+# ---------------------------------------------------------------------------
+# Chunked admission through the router (PREFILLING streams)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chunked_router():
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cushion = api.extract_cushion(params, jnp.asarray([1, 2, 3], jnp.int32),
+                                  None, QN)
+    r = ReplicaRouter(api, params, QN, n_replicas=1,
+                      cfg=RouterConfig(max_queue=64, backoff_base_s=0.0),
+                      cushion=cushion, n_slots=2, max_seq=128,
+                      chunk_tokens=8)
+    r.api = api
+    return r
+
+
+def test_chunked_streams_complete_through_router(chunked_router):
+    """The router keeps stepping an engine whose only work is a PREFILLING
+    stream (live_count == 0): long prompts chunk-stream to completion and
+    every request is served."""
+    api = chunked_router.api
+    reqs = [Request(uid=i, batch=api.make_batch(jax.random.PRNGKey(100 + i),
+                                                1, [48, 12][i % 2]),
+                    max_new_tokens=3)
+            for i in range(4)]
+    res = chunked_router.run(reqs)
+    assert sorted(o.uid for o in res.outputs) == [0, 1, 2, 3]
+    assert not res.rejected
+    assert res.stats.per_replica[0]["prefill_chunks"] >= 6
+
+
+def test_deadline_expires_mid_prefill(chunked_router):
+    """A deadline blowing between prefill chunks retires the stream with
+    an explicit ``deadline-prefill`` rejection (the engine enforces it;
+    the router maps ``pop_expired`` to the reason and clears inflight) —
+    never ``deadline-decoding``, which is the mid-decode path."""
+    api = chunked_router.api
+    req = Request(uid=0, batch=api.make_batch(jax.random.PRNGKey(100), 1, 96),
+                  max_new_tokens=4, deadline_s=0.02)
+    res = chunked_router.run([req])
+    assert not res.outputs
+    assert [(r.uid, r.reason) for r in res.rejected] == \
+        [(0, "deadline-prefill")]
+    assert res.stats.rejections == {"deadline-prefill": 1}
+    assert res.stats.per_replica[0]["deadline_prefill"] == 1
+    assert res.stats.per_replica[0]["canceled"] == 0, \
+        "stream expiry is not a decode cancel"
+
+
 def test_drain_under_load_completes_live_slots(router):
     """An injected KeyboardInterrupt mid-trace takes the graceful-drain
     path: live slots decode to completion (with parity), the queued
