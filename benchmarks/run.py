@@ -726,13 +726,192 @@ def page_bench(tp: int = 1):
                          f"unsharded dense run")
 
 
+def cushion_bench(tp: int = 1):
+    """CushionCache stage-2 quality gate (``results/BENCH_cushion.json``):
+    the full discover -> tune -> serve pipeline on paper_tiny with planted
+    activation outliers, measured at three points — no cushion, greedy
+    search only, gradient-tuned — and gated so the tuned artifact is never
+    worse than what stage 1 already delivered:
+
+    * last-block max-activation top-1 and held-out perplexity per variant;
+      tuned must stay within 1.05x of greedy on both (from the greedy
+      start, tuning optimizes CE + λ·range — it must not walk quality or
+      the outlier suppression backwards)
+    * W8A8 accuracy margin (pt_static true-int8 next-token accuracy minus
+      fp accuracy), scales calibrated per cushion via ``calibrate_tagged``;
+      tuned margin must hold within 0.05 of greedy's
+    * the tuning loop's host syncs are counted and bounded at
+      steps/log_every + 1 (the per-step-sync regression this pipeline
+      fixed)
+    * the tuned cushion round-trips through a versioned
+      ``checkpoint.store`` artifact fingerprint-identically
+    * the restored artifact serves token-for-token identically through the
+      static Engine and the continuous scheduler, dense and paged (shared
+      cushion block); ``tp > 1`` adds a tensor-parallel continuous run
+      (replicated-per-shard cushion) against the same oracle."""
+    import json
+    import os
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit
+    from repro import monitoring as MON
+    from repro.checkpoint.store import CheckpointManager
+    from repro.configs import CushionConfig, QuantConfig, get_config
+    from repro.core import cushioncache as CC
+    from repro.core import outliers as OUT
+    from repro.core.calibration import calibrate_tagged
+    from repro.launch.serve import poisson_trace
+    from repro.models.registry import build
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import ContinuousEngine
+    from repro.train.trainer import eval_next_token_acc, eval_ppl
+
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    # plant the massive-activation pathway the paper mitigates (same
+    # construction as tests/test_cushion.py)
+    w = params["layers"]["mlp"]["w_down"]
+    params["layers"]["mlp"]["w_down"] = w.at[0, :8, 5].set(300.0)
+
+    qd = QuantConfig(mode="pt_dynamic")
+    qn = QuantConfig(mode="none")
+    qs = QuantConfig(mode="pt_static", true_int8=True)
+    sample = lambda i: api.make_batch(jax.random.PRNGKey(100 + i), 1, 48)
+    tune_b = lambda i: api.make_batch(jax.random.PRNGKey(3000 + i), 2, 48)
+    eval_batches = [api.make_batch(jax.random.PRNGKey(7000 + i), 2, 48)
+                    for i in range(4)]
+    calib = [tune_b(100 + i) for i in range(2)]
+
+    steps, log_every = 40, 10
+    ccfg = CushionConfig(max_prefix_len=4, tau=1.0, n_candidates=16,
+                         seed_tokens=(1,), lam=0.1, tune_steps=steps,
+                         tune_lr=1e-3, log_every=log_every)
+    greedy, sr, _ = CC.discover(api, params, sample, iter(()), qd, ccfg,
+                                jax.random.PRNGKey(1), skip_tune=True,
+                                verbose=False)
+
+    def batches():
+        i = 0
+        while True:
+            yield tune_b(i)
+            i += 1
+
+    with MON.count_host_syncs() as sync:
+        tr = CC.prefix_tune(api, params, greedy, batches(), qd, ccfg,
+                            verbose=False)
+    tuned = tr.cushion
+
+    from repro.models import transformer as TMOD
+    variants = {"none": None, "greedy": greedy, "tuned": tuned}
+    metrics = {}
+    for name, c in variants.items():
+        top1 = OUT.last_block_input_stats(api, params, eval_batches[0],
+                                          qn, cushion=c)["top1"]
+        ppl = eval_ppl(api, params, eval_batches, qn, cushion=c)
+        # total per-site quantization error — the quantity the cushion
+        # exists to reduce (paper Table 1's mechanism at CPU scale)
+        _, taps = api.forward(params, eval_batches[0], qd, cushion=c,
+                              collect=True)
+        qerr = float(TMOD.total_qerr(taps))
+        tagged, _ = calibrate_tagged(api, params, calib, qs, cushion=c)
+        acc_fp = eval_next_token_acc(api, params, eval_batches, qn,
+                                     cushion=c)
+        acc_w8 = eval_next_token_acc(api, params, eval_batches, qs,
+                                     cushion=c, scales=tagged.scales)
+        metrics[name] = {"maxact_top1": top1, "ppl": ppl, "qerr": qerr,
+                         "acc_fp": acc_fp, "acc_w8": acc_w8,
+                         "w8a8_margin": acc_w8 - acc_fp}
+        emit(f"cushion_{name}_qerr", qerr * 1e3,
+             f"maxact={top1:.1f} ppl={ppl:.2f} "
+             f"w8a8_margin={acc_w8 - acc_fp:+.4f}")
+
+    # artifact round trip: the fingerprint survives save/restore
+    fp = CC.cushion_fingerprint(tuned)
+    with tempfile.TemporaryDirectory() as td:
+        store = CheckpointManager(td)
+        store.save(1, {"cushion": tuned},
+                   extra={"kind": "cushion", "fingerprint": fp})
+        tree, _ = store.restore_tree(1)
+        restored = jax.tree_util.tree_map(jnp.asarray, tree["cushion"])
+    roundtrip_ok = CC.cushion_fingerprint(restored) == fp
+
+    # serving parity on the restored artifact: Engine is the oracle
+    reqs = poisson_trace(api, 0, 6, 60.0, (20, 26), (5, 3))
+    eng = Engine(api, params, qn, cushion=restored, max_seq=128)
+    want = {r.uid: eng.generate(r.batch, r.max_new_tokens).tokens[0]
+            for r in reqs}
+
+    def parity(**kw):
+        ce = ContinuousEngine(api, params, qn, n_slots=2, max_seq=128,
+                              cushion=restored, **kw)
+        outs = ce.run(reqs)
+        return (len(outs) == len(reqs)
+                and all(np.array_equal(o.tokens, want[o.uid])
+                        for o in outs))
+
+    par = {"dense": parity(), "paged": parity(paged=True, page_size=32)}
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        par[f"tp{tp}"] = parity(mesh=make_tp_mesh(tp))
+    emit("cushion_serving_parity",
+         float(all(par.values())) * 1e6, str(par))
+
+    sync_bound = steps // log_every + 1
+    point = {"model": cfg.name, "tp": tp,
+             "prefix_ids": [int(t) for t in sr.prefix_ids],
+             "tune_steps": steps, "tune_lr": ccfg.tune_lr,
+             "lam": ccfg.lam, "log_every": log_every,
+             "tune_host_syncs": sync.count,
+             "tune_host_sync_bound": sync_bound,
+             "tune_wall_s": tr.wall_time_s,
+             "fingerprint": fp, "artifact_roundtrip": roundtrip_ok,
+             "metrics": metrics, "serving_parity": par}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_cushion.json"), "w") as f:
+        json.dump({"bench": "cushion", "points": [point]}, f, indent=1,
+                  default=float)
+
+    g, t = metrics["greedy"], metrics["tuned"]
+    if sync.count > sync_bound:
+        raise SystemExit(f"tuning host-synced {sync.count}x, bound is "
+                         f"{sync_bound} (per-step sync regression)")
+    if t["maxact_top1"] > 1.05 * g["maxact_top1"]:
+        raise SystemExit(f"tuned max-activation regressed vs greedy: "
+                         f"{t['maxact_top1']:.1f} vs {g['maxact_top1']:.1f}")
+    if t["ppl"] > 1.05 * g["ppl"]:
+        raise SystemExit(f"tuned perplexity regressed vs greedy: "
+                         f"{t['ppl']:.2f} vs {g['ppl']:.2f}")
+    if t["qerr"] >= metrics["none"]["qerr"]:
+        raise SystemExit(f"tuned cushion does not reduce quantization "
+                         f"error vs no cushion: {t['qerr']:.2f} vs "
+                         f"{metrics['none']['qerr']:.2f}")
+    if t["qerr"] > 1.05 * g["qerr"]:
+        raise SystemExit(f"tuned qerr regressed vs greedy: "
+                         f"{t['qerr']:.2f} vs {g['qerr']:.2f}")
+    if t["w8a8_margin"] < g["w8a8_margin"] - 0.05:
+        raise SystemExit(f"tuned W8A8 accuracy margin collapsed: "
+                         f"{t['w8a8_margin']:+.4f} vs greedy "
+                         f"{g['w8a8_margin']:+.4f}")
+    if not roundtrip_ok:
+        raise SystemExit("tuned cushion artifact did not round-trip "
+                         "fingerprint-identically")
+    if not all(par.values()):
+        raise SystemExit(f"tuned-cushion serving parity failed: {par}")
+
+
 EXTRA_BENCHES = {"kernel_microbench": kernel_microbench,
                  "decode_bench": decode_bench,
                  "search_bench": search_bench,
                  "serve_bench": serve_bench,
                  "w8a8_bench": w8a8_bench,
                  "router_bench": router_bench,
-                 "page_bench": page_bench}
+                 "page_bench": page_bench,
+                 "cushion_bench": cushion_bench}
 
 
 def main() -> None:
@@ -759,7 +938,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.only in EXTRA_BENCHES:
         kw = {}
-        if args.only in ("serve_bench", "page_bench"):
+        if args.only in ("serve_bench", "page_bench", "cushion_bench"):
             kw = {"tp": args.tp}
         elif args.only == "router_bench":
             kw = {"replicas": args.replicas}

@@ -109,10 +109,9 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, step: int, like: Any, shardings: Any = None,
-                verify: bool = True) -> Any:
-        """Restore into the structure of `like`; optionally device_put with
-        `shardings` (same treedef) — this is the elastic reshard path."""
+    def _load_arrays(self, step: int, verify: bool):
+        """(manifest, npz handle) for a step, with integrity verification —
+        the shared front half of `restore` / `restore_tree`."""
         d = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -123,7 +122,13 @@ class CheckpointManager:
             if got != want:
                 raise IOError(f"checkpoint corruption at step {step}: "
                               f"sha256 {got} != {want}")
-        data = np.load(apath)
+        return manifest, np.load(apath)
+
+    def restore(self, step: int, like: Any, shardings: Any = None,
+                verify: bool = True) -> Any:
+        """Restore into the structure of `like`; optionally device_put with
+        `shardings` (same treedef) — this is the elastic reshard path."""
+        manifest, data = self._load_arrays(step, verify)
         keys, vals, treedef = _flatten(like)
         if keys != manifest["keys"]:
             raise ValueError("checkpoint/param-tree structure mismatch")
@@ -136,6 +141,28 @@ class CheckpointManager:
             arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_s)]
             tree = jax.tree_util.tree_unflatten(treedef, arrays)
         return tree
+
+    def restore_tree(self, step: int, verify: bool = True):
+        """Rebuild the saved pytree as NESTED DICTS purely from the
+        manifest — no `like` template. For artifacts whose structure the
+        loader can't know statically (cushion artifacts: the kv/state
+        subtrees and the optional scales tree are family- and
+        configuration-dependent). Manifest keys split on "/" and every
+        level restores as a dict (sequence indices and attr names become
+        string keys — cushion/scales artifacts are saved as pure nested
+        dicts, see calibration.scales_to_plain). Returns (tree, manifest).
+        """
+        manifest, data = self._load_arrays(step, verify)
+        import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+        tree: Dict[str, Any] = {}
+        for i, key in enumerate(manifest["keys"]):
+            parts = key.split("/")
+            node = tree
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[f"a{i}"].astype(
+                np.dtype(manifest["dtypes"][i]))
+        return tree, manifest
 
     def manifest(self, step: int) -> Dict:
         d = os.path.join(self.directory, f"step_{step:08d}")

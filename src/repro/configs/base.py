@@ -187,6 +187,8 @@ class CushionConfig:
     lam: float = 0.01                # λ for L_pred + λ·L_q, eq. (11)
     tune_steps: int = 200
     tune_lr: float = 1e-3
+    log_every: int = 10              # tuning metric host-sync cadence (steps
+                                     # per blocking device->host transfer)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,14 +5,54 @@ split").
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterable, Optional
+from typing import Any, Dict, Iterable, NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import Family, QuantConfig
 from repro.core import quantization as Q
 
 NON_SITES = ("block_in", "final_in")
+
+
+class CalibratedScales(NamedTuple):
+    """Static scales plus the fingerprint of the cushion they were
+    calibrated under (`cushioncache.cushion_fingerprint`; ``"none"`` for a
+    cushionless calibration). `serving.engine.plan_quantization` unwraps
+    this and hard-fails when handed a different cushion — pt_static ranges
+    describe one cushioned activation distribution and silently serve
+    garbage under another. Produced by `calibrate_tagged` and by
+    `launch/serve.py` when loading a tune artifact's saved scales."""
+    scales: Any
+    cushion_fp: str
+
+
+def calibrate_tagged(api, params, batches: Iterable[Dict[str, Any]],
+                     qcfg: QuantConfig, cushion=None, n_skip: int = 0):
+    """`calibrate`, with the scales wrapped in their cushion provenance.
+    Returns (CalibratedScales, merged_stats)."""
+    from repro.core.cushioncache import cushion_fingerprint
+    scales, merged = calibrate(api, params, batches, qcfg, cushion=cushion,
+                               n_skip=n_skip)
+    return CalibratedScales(scales, cushion_fingerprint(cushion)), merged
+
+
+def scales_to_plain(scales: Any) -> Any:
+    """SiteScale leaves -> plain ``{"scale", "zero"}`` dicts, so a scales
+    pytree can ride a `checkpoint.store` artifact as nested dicts."""
+    return jax.tree_util.tree_map(
+        lambda s: {"scale": s.scale, "zero": s.zero}, scales,
+        is_leaf=lambda x: isinstance(x, Q.SiteScale))
+
+
+def scales_from_plain(tree: Any) -> Any:
+    """Inverse of `scales_to_plain` (restored leaves may be numpy)."""
+    is_site = lambda d: isinstance(d, dict) and set(d) == {"scale", "zero"}
+    return jax.tree_util.tree_map(
+        lambda d: Q.SiteScale(scale=jnp.asarray(d["scale"]),
+                              zero=jnp.asarray(d["zero"])),
+        tree, is_leaf=is_site)
 
 
 def _sites_only(tree: Dict[str, Any]) -> Dict[str, Any]:

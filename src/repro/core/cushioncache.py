@@ -7,9 +7,12 @@ Two stages:
      batched inference) to minimize L_q(t | p, p'), with early stopping at
      improvement ratio tau.
   2. `prefix_tune`     — quantization-aware prefix tuning: freeze the model,
-     train the per-layer cushion (KV / recurrent state) on
-     L = L_pred + lambda * L_q with straight-through quantized forward and
-     stop-grad quantizer parameters (paper eq. 11).
+     train the cushion KV block (the only trainable leaves) on
+     L = L_pred + lambda * L_range (paper eq. 11; `core.outliers`'
+     differentiable activation-range penalty as the regularizer) with a
+     straight-through quantized forward and stop-grad quantizer
+     parameters. Compile-once donated step, periodic metric host syncs,
+     optional data-axis batch sharding — see the function docstring.
 
 The searched prefix is converted to the deployment artifact with
 `ModelAPI.extract_cushion` (KV for attention archs, recurrent state for
@@ -39,6 +42,8 @@ falls back to it automatically), and the baseline for
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
@@ -50,6 +55,31 @@ from repro.configs.base import CushionConfig, QuantConfig
 from repro.models import transformer as T
 
 Params = Dict[str, Any]
+
+
+def cushion_fingerprint(cushion: Optional[Params]) -> str:
+    """Content fingerprint of a cushion artifact: sha256 over every leaf's
+    path, dtype, shape and exact bytes (``"none"`` for no cushion).
+
+    This is the provenance tie between a cushion and everything derived
+    under it: `launch/tune.py` stamps it into the artifact manifest (load
+    integrity), `calibration.CalibratedScales` carries the fingerprint of
+    the cushion its pt_static scales were calibrated under, and
+    `serving.engine.plan_quantization` hard-fails when the two diverge —
+    static ranges describe ONE cushioned activation distribution and
+    silently serve garbage under another.
+    """
+    if cushion is None:
+        return "none"
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(cushion)
+    for kp, leaf in flat:
+        a = np.asarray(leaf)
+        h.update(jax.tree_util.keystr(kp).encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -284,49 +314,128 @@ class TuneResult:
     wall_time_s: float
 
 
+def _partition_cushion(cushion0: Params):
+    """(frozen path substrings, stop-grad wrapper) for a family's cushion
+    tree. The paper tunes the cached prefix KV, so the "kv" kc/vc block is
+    the only trainable subtree; anything alongside it (the hybrid family's
+    recurrent "state" leaves) is frozen — stop_gradient in the loss plus
+    the AdamW `frozen` mask keeps those leaves bit-identical through
+    tuning. Families whose whole artifact is recurrent state (ssm: no "kv"
+    key) train the full tree."""
+    if "kv" not in cushion0:
+        return (), lambda c: c
+    frozen = tuple(k for k in cushion0 if k != "kv")
+    if not frozen:
+        return (), lambda c: c
+
+    def stop_grad_frozen(c):
+        return {k: (v if k == "kv"
+                    else jax.tree_util.tree_map(jax.lax.stop_gradient, v))
+                for k, v in c.items()}
+
+    return frozen, stop_grad_frozen
+
+
 def prefix_tune(api, params, cushion0: Params,
                 batch_iter: Iterable[Dict[str, Any]],
                 qcfg: QuantConfig, ccfg: CushionConfig,
                 scales: Optional[Params] = None,
-                verbose: bool = True) -> TuneResult:
-    """Freeze the model; train the cushion on L_pred + lambda*L_q (eq. 11).
+                mesh=None, verbose: bool = True) -> TuneResult:
+    """Freeze the model; train the cushion KV on
+    L = L_pred + lambda * L_range (eq. 11, with `core.outliers`'
+    differentiable activation-range penalty as the quantization
+    regularizer). The quantized forward uses straight-through estimation;
+    quantizer scale/zero-points are stop-grad'ed inside the quantizers
+    (fake_quant), matching Jacob et al. QAT practice as cited by the paper.
 
-    The quantized forward uses straight-through estimation; quantizer
-    scale/zero-points are stop-grad'ed inside the quantizers (fake_quant),
-    matching Jacob et al. QAT practice as cited by the paper.
+    Pipeline properties:
+
+    * the step jits ONCE and DONATES both the cushion and the optimizer
+      state — fixed shapes, no per-step buffer copies;
+    * only the "kv" block trains (`_partition_cushion`): hybrid recurrent
+      state leaves come out bit-identical, preserving the serving pools'
+      cushion-rewrite guarantee;
+    * per-step metrics stay on device; the log drains to host every
+      ``ccfg.log_every`` steps through `monitoring.host_sync` (ONE
+      blocking transfer per drain — `count_host_syncs` bounds it in
+      tests), while still recording every step;
+    * ``mesh=`` shards batches over the mesh's "data" axis with the
+      cushion/optimizer state replicated, `shard_update_step`-style
+      (the batch size must divide the data axis).
     """
+    from repro import monitoring as MON
+    from repro.core import outliers as OUT
     from repro.optim.adamw import AdamW, constant_lr
 
     t0 = time.time()
+    frozen, stop_grad_frozen = _partition_cushion(cushion0)
     opt = AdamW(lr=constant_lr(ccfg.tune_lr), weight_decay=0.0,
-                grad_clip=1.0)
+                grad_clip=1.0, frozen=frozen)
     state = opt.init(cushion0)
 
     def loss(cush, batch):
-        l, aux = api.loss_fn(params, batch, qcfg, scales=scales,
-                             cushion=cush, lam=ccfg.lam, remat=False)
-        return l, aux
+        cush = stop_grad_frozen(cush)
+        _, aux = api.loss_fn(params, batch, qcfg, scales=scales,
+                             cushion=cush, collect=True, remat=False)
+        reg = OUT.activation_range_penalty(aux["taps"])
+        total = aux["ce"] + ccfg.lam * reg
+        return total, {"ce": aux["ce"], "range": reg,
+                       "qerr": aux.get("qerr", jnp.zeros(()))}
 
-    @jax.jit
     def step(cush, state, batch):
         (l, aux), g = jax.value_and_grad(loss, has_aux=True)(cush, batch)
         cush, state, om = opt.update(g, state, cush)
-        return cush, state, {"loss": l, "ce": aux["ce"],
-                             "qerr": aux.get("qerr", jnp.zeros(())),
-                             "gnorm": om["grad_norm"]}
+        return cush, state, {"loss": l, **aux, "gnorm": om["grad_norm"]}
 
-    cushion = cushion0
+    # the donated step consumes its carry buffers, including the very first
+    # ones — train on a private copy so the caller's cushion0 stays alive
+    cushion = jax.tree_util.tree_map(jnp.array, cushion0)
+    it = iter(batch_iter)
+    try:
+        first = next(it)
+    except StopIteration:
+        return TuneResult(cushion=cushion, log=[],
+                          wall_time_s=time.time() - t0)
+
+    if mesh is None:
+        step_fn = jax.jit(step, donate_argnums=(0, 1))
+    else:
+        from repro.train.trainer import replicated_shardings, \
+            shard_update_step
+        c_sh = replicated_shardings(cushion0, mesh)
+        o_sh = replicated_shardings(jax.eval_shape(opt.init, cushion0),
+                                    mesh)
+        step_fn = shard_update_step(step, mesh, c_sh, o_sh, first)
+        cushion = jax.device_put(cushion, c_sh)
+        state = jax.device_put(state, o_sh)
+
     log: List[Dict[str, float]] = []
-    for i, batch in enumerate(batch_iter):
+    pending: List[Tuple[int, Dict[str, Any]]] = []
+    log_every = max(1, int(getattr(ccfg, "log_every", 10)))
+    print_every = max(1, ccfg.tune_steps // 10)
+
+    def drain():
+        if not pending:
+            return
+        fetched = MON.host_sync([m for _, m in pending])
+        for (j, _), mv in zip(pending, fetched):
+            rec = {k: float(v) for k, v in mv.items()}
+            rec["step"] = j
+            log.append(rec)
+            if verbose and j % print_every == 0:
+                print(f"[tune] step={j} loss={rec['loss']:.4f} "
+                      f"ce={rec['ce']:.4f} range={rec['range']:.4g} "
+                      f"L_q={rec['qerr']:.4g}")
+        pending.clear()
+
+    for i, batch in enumerate(itertools.chain([first], it)):
         if i >= ccfg.tune_steps:
             break
-        cushion, state, m = step(cushion, state, batch)
-        rec = {k: float(v) for k, v in m.items()}
-        rec["step"] = i
-        log.append(rec)
-        if verbose and (i % max(1, ccfg.tune_steps // 10) == 0):
-            print(f"[tune] step={i} loss={rec['loss']:.4f} "
-                  f"ce={rec['ce']:.4f} L_q={rec['qerr']:.4g}")
+        cushion, state, m = step_fn(cushion, state, batch)
+        pending.append((i, m))
+        if len(pending) >= log_every:
+            drain()
+    drain()
     return TuneResult(cushion=cushion, log=log,
                       wall_time_s=time.time() - t0)
 
@@ -338,19 +447,24 @@ def prefix_tune(api, params, cushion0: Params,
 def discover(api, params, sample_fn: Callable[[int], Dict[str, Any]],
              batch_iter: Iterable[Dict[str, Any]], qcfg: QuantConfig,
              ccfg: CushionConfig, rng, skip_tune: bool = False,
-             verbose: bool = True):
+             mesh=None, verbose: bool = True):
     """greedy search -> extract KV/state -> quantization-aware tuning.
-    Returns (cushion, SearchResult, TuneResult|None)."""
+    Returns (cushion, SearchResult, TuneResult|None).
+
+    The artifact keeps the dtype `extract_cushion` emits (the model's
+    cache/compute dtype): a bf16 model gets a bf16 cushion, so the serving
+    pools' bit-identical cushion-rewrite-on-recycle guarantee holds without
+    casts. (An earlier version force-cast to fp32 here, which broke that
+    guarantee for bf16 models; AdamW keeps fp32 moments internally and
+    casts the update back per leaf, so tuning preserves the dtype too.)"""
     sr = greedy_search(api, params, sample_fn, qcfg, ccfg, rng,
                        verbose=verbose)
     prefix_ids = jnp.asarray(sr.prefix_ids, jnp.int32)
     if prefix_ids.size == 0:
         prefix_ids = jnp.asarray([0], jnp.int32)
     cushion = api.extract_cushion(params, prefix_ids, None, qcfg)
-    cushion = jax.tree_util.tree_map(
-        lambda a: a.astype(jnp.float32), cushion)
     if skip_tune:
         return cushion, sr, None
     tr = prefix_tune(api, params, cushion, batch_iter, qcfg, ccfg,
-                     verbose=verbose)
+                     mesh=mesh, verbose=verbose)
     return tr.cushion, sr, tr

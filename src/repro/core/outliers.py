@@ -26,6 +26,48 @@ def magnitude_stats(x: jax.Array, n_skip: int = 0) -> Dict[str, jax.Array]:
             "top10pct": q90, "median": med}
 
 
+def activation_range_penalty(taps: Any) -> jax.Array:
+    """Differentiable activation-range regularizer (the L_q term of
+    prefix tuning's L = L_pred + λ·L_q, eq. 11): sum over every collected
+    *quantization site* of the squared tensor absmax,
+    ``max(amax, -amin)²`` — the quantity a per-tensor grid's step size is
+    proportional to, so squeezing it directly narrows the deployed scales.
+
+    `core.quantization.site_stats` builds amin/amax from plain jnp
+    reductions over the token part of each site's input, so gradient flows
+    from this penalty back through attention into the cushion KV — the
+    prefix literally learns to absorb whatever widens a quantization grid
+    downstream. Per-layer stacked (L,) leaves and scalar head leaves both
+    reduce into one fp32 total.
+
+    Only true sites (linear inputs — what `site_qerr` measures and what
+    pt_static scales cover) count; the analysis-only residual-stream taps
+    (`calibration.NON_SITES`: block_in/final_in) are excluded. They sit
+    before the norms, carry the massive-activation pathology at ~10³× the
+    site magnitudes, and are never quantized — penalizing them drowns out
+    the actual quantization-range signal.
+    """
+    from repro.core.calibration import NON_SITES
+    total = jnp.zeros((), jnp.float32)
+
+    def visit(d):
+        nonlocal total
+        if not isinstance(d, dict):
+            return
+        if "amin" in d and "amax" in d:
+            half = jnp.maximum(d["amax"].astype(jnp.float32),
+                               -d["amin"].astype(jnp.float32))
+            total = total + jnp.sum(jnp.square(half))
+            return                      # a site dict: no nested sites below
+        for k, v in d.items():
+            if k in NON_SITES:
+                continue
+            visit(v)
+
+    visit(taps)
+    return total
+
+
 def last_block_input_stats(api, params, batch, qcfg: QuantConfig,
                            cushion=None, n_skip: int = 0) -> Dict[str, float]:
     """Table-5 numbers: magnitude stats of the input to the LAST transformer

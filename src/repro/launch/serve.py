@@ -2,11 +2,21 @@
 optional CushionCache artifact.
 
     python -m repro.launch.serve --arch paper_tiny --quant pt_static \
-        --cushion artifacts/cushion.npz --tokens 64
+        --cushion artifacts/cushion --tokens 64
 
 The default (static) mode runs one Engine batch: device-resident decode
 (one jitted lax.scan — no per-token host sync); --kv-dtype int8 serves
 from a quantized KV cache with the cushion prefix kept intact in fp.
+
+--cushion DIR loads the latest tuned-cushion artifact written by
+``launch/tune.py`` (a ``checkpoint.store`` versioned directory). The
+content fingerprint is recomputed over the restored bytes and checked
+against the manifest — a corrupt or mismatched artifact fails loudly at
+load, never as silently drifted activations. If the artifact carries
+pt_static scales (tune --with-scales) and --quant pt_static, those scales
+serve directly (no load-time calibration) wrapped with their cushion
+fingerprint so ``plan_quantization`` can reject a stale pairing; without
+stored scales, pt_static calibrates at load *under the loaded cushion*.
 
 --quant pt_static serves the calibrated true-int8 W8A8 deployment path:
 site scales are calibrated at engine load over --calib-batches synthetic
@@ -122,6 +132,54 @@ def poisson_trace(api, rng_seed: int, n_requests: int, rate: float,
     return reqs
 
 
+def load_cushion_artifact(path: str, api):
+    """Load the latest cushion artifact from a ``launch/tune.py``
+    --out-dir. Returns ``(cushion, tagged_scales | None, extra)``.
+
+    Trust-but-verify: the content fingerprint is recomputed over the
+    restored (device) arrays and compared to the manifest's — bit-rot,
+    a truncated copy, or a hand-edited artifact dies here with a clear
+    message instead of serving subtly wrong prefix KV. The arch name is
+    checked too (a smoke artifact only serves a smoke config: `reduced`
+    renames the config, so the mismatch is caught, not silently shaped
+    in). Stored scales come back as ``calibration.CalibratedScales``
+    carrying the fingerprint of the cushion they were calibrated under,
+    which `plan_quantization` enforces against the cushion actually
+    served."""
+    from repro.core.calibration import CalibratedScales, scales_from_plain
+    from repro.core.cushioncache import cushion_fingerprint
+
+    store = CheckpointManager(path)
+    version = store.latest_step()
+    if version is None:
+        raise SystemExit(f"[serve] no cushion artifact under {path}")
+    tree, manifest = store.restore_tree(version)
+    extra = manifest.get("extra", {})
+    if extra.get("kind") != "cushion":
+        raise SystemExit(f"[serve] {path} v{version} is not a cushion "
+                         f"artifact (kind={extra.get('kind')!r}); expected "
+                         f"a launch/tune.py --out-dir")
+    if extra.get("arch") and extra["arch"] != api.cfg.name:
+        raise SystemExit(f"[serve] cushion artifact was tuned for arch "
+                         f"{extra['arch']!r} but serving {api.cfg.name!r}")
+    cushion = jax.tree_util.tree_map(jnp.asarray, tree["cushion"])
+    got = cushion_fingerprint(cushion)
+    want = extra.get("fingerprint")
+    if want and got != want:
+        raise SystemExit(f"[serve] cushion artifact fingerprint mismatch: "
+                         f"manifest says {want[:12]} but restored bytes "
+                         f"hash to {got[:12]} — artifact corrupt")
+    scales = None
+    if "scales" in tree:
+        scales = CalibratedScales(scales_from_plain(tree["scales"]),
+                                  extra.get("scales_cushion_fp", got))
+    print(f"[serve] cushion artifact v{version} from {path}: "
+          f"prefix_ids={extra.get('prefix_ids')} "
+          f"fingerprint={got[:12]} scales="
+          f"{'stored' if scales is not None else 'none'}")
+    return cushion, scales, extra
+
+
 def install_sigterm_drain() -> None:
     """Map SIGTERM onto KeyboardInterrupt so orchestrator shutdowns take
     the same graceful-drain path as ctrl-C: stop admitting, decode live
@@ -139,14 +197,14 @@ def install_sigterm_drain() -> None:
 
 
 def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
-                   calib_batches=None):
+                   calib_batches=None, cushion=None, scales=None):
     install_sigterm_drain()
     reqs = poisson_trace(api, args.trace_seed, args.n_requests, args.rate,
                          prompt_lens=(args.prompt_len, args.prompt_len + 8),
                          budgets=(args.tokens, max(1, args.tokens // 2)))
     eng = ContinuousEngine(api, params, qcfg, n_slots=args.slots,
                            max_seq=args.prompt_len + 8 + args.tokens + 32,
-                           mesh=mesh,
+                           cushion=cushion, scales=scales, mesh=mesh,
                            kv_dtype=None if args.kv_dtype == "fp"
                            else args.kv_dtype,
                            calib_batches=calib_batches,
@@ -158,6 +216,9 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
     if eng.chunk_tokens:
         print(f"[serve] chunked prefill: {eng.chunk_tokens} tokens/chunk "
               f"(budget bucketed from --chunk-tokens {args.chunk_tokens})")
+    if cushion is not None:
+        print(f"[serve] serving cushion {eng.cushion_fp[:12]} "
+              f"(prefix_len={eng.prefix_len})")
     print(f"[serve] resident weights: "
           f"fp={eng.stats.weight_bytes_fp / 2 ** 20:.1f} MiB "
           f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB")
@@ -213,7 +274,8 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
     return outs
 
 
-def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None):
+def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None,
+               cushion=None, scales=None):
     """--replicas N: the trace goes through the fault-tolerant replica
     router instead of a single engine. --chaos arms deterministic fault
     injection; rejections, retries, failovers and per-replica health land
@@ -239,6 +301,7 @@ def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None):
         api, params, qcfg, n_replicas=args.replicas,
         cfg=RouterConfig(max_queue=args.max_queue), meshes=meshes,
         n_slots=args.slots, max_seq=args.prompt_len + 8 + args.tokens + 32,
+        cushion=cushion, scales=scales,
         kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
         calib_batches=calib_batches, prequant=args.prequant,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
@@ -328,6 +391,11 @@ def main(argv=None):
                          "identical workload replay")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from latest checkpoint")
+    ap.add_argument("--cushion", default=None,
+                    help="serve the latest tuned-cushion artifact from "
+                         "this launch/tune.py --out-dir (fingerprint "
+                         "verified at load; stored pt_static scales serve "
+                         "directly when --quant pt_static)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel width: shard params (serve rules) "
@@ -423,29 +491,47 @@ def main(argv=None):
         print(f"[serve] tp={args.tp} mesh over "
               f"{[str(d) for d in mesh.devices.flat]}")
 
+    cushion, art_scales = None, None
+    if args.cushion:
+        cushion, art_scales, _ = load_cushion_artifact(args.cushion, api)
+        if art_scales is not None and args.quant != "pt_static":
+            art_scales = None       # stored scales only apply to pt_static
+
     corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
     pipe = Pipeline(corpus, batch=args.batch, seq_len=args.prompt_len,
                     seed=args.seed + 1)
     calib = None
     if args.quant == "pt_static":
-        calib = [{k: jnp.asarray(v) for k, v in pipe.get_batch(1000 + i).items()}
-                 for i in range(args.calib_batches)]
-        print(f"[serve] pt_static: calibrating site scales over "
-              f"{len(calib)} batches at engine load")
+        if art_scales is not None:
+            print("[serve] pt_static: serving the artifact's stored scales "
+                  f"(calibrated under cushion "
+                  f"{art_scales.cushion_fp[:12]}) — no load-time "
+                  "calibration")
+        else:
+            calib = [{k: jnp.asarray(v)
+                      for k, v in pipe.get_batch(1000 + i).items()}
+                     for i in range(args.calib_batches)]
+            print(f"[serve] pt_static: calibrating site scales over "
+                  f"{len(calib)} batches at engine load"
+                  + (" (under the loaded cushion)" if cushion is not None
+                     else ""))
 
     if args.mode == "continuous":
         if args.replicas > 1 or args.chaos:
             return run_router(api, params, qcfg, args,
                               bench_path=args.bench_json,
-                              calib_batches=calib)
+                              calib_batches=calib, cushion=cushion,
+                              scales=art_scales)
         return run_continuous(api, params, qcfg, args,
                               bench_path=args.bench_json, mesh=mesh,
-                              calib_batches=calib)
+                              calib_batches=calib, cushion=cushion,
+                              scales=art_scales)
 
     batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(0).items()}
 
     eng = Engine(api, params, qcfg,
                  max_seq=args.prompt_len + args.tokens + 32,
+                 cushion=cushion, scales=art_scales,
                  kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
                  mesh=mesh, calib_batches=calib, prequant=args.prequant)
     print(f"[serve] resident weights: "

@@ -160,9 +160,11 @@ def n_mamba_per_period(cfg: ModelConfig) -> int:
     return sum(1 for m, _ in kinds if m == "mamba")
 
 
-def cushion_zeros(cfg: ModelConfig, m: int, dtype=jnp.float32) -> Params:
+def cushion_zeros(cfg: ModelConfig, m: int, dtype=None) -> Params:
     """Prefix KV for the attention layers + initial states for the Mamba
-    layers (batch-free; broadcast at use)."""
+    layers (batch-free; broadcast at use). Defaults to the model compute
+    dtype (see transformer.cushion_zeros)."""
+    dtype = C.dtype_of(cfg) if dtype is None else dtype
     n_periods, _ = layout(cfg)
     K, hd = cfg.n_kv_heads, cfg.head_dim
     nm = n_mamba_per_period(cfg)

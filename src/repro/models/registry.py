@@ -141,7 +141,10 @@ class ModelAPI:
         per-slot scales over the whole prompt here)."""
         return self.mod.finalize_staged_kv(row, cache, cushion, S)
 
-    def cushion_zeros(self, m: int, dtype=jnp.float32):
+    def cushion_zeros(self, m: int, dtype=None):
+        """Zero cushion artifact; dtype=None follows the model compute
+        dtype — the same dtype `extract_cushion` emits, so a zeros
+        template and a real artifact are always interchangeable."""
         return self.mod.cushion_zeros(self.cfg, m, dtype=dtype)
 
     def forward_with_token_prefix(self, params, prefix_ids, batch,

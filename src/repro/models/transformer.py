@@ -369,7 +369,11 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
 # Cushion KV parameter shape (for prefix tuning)
 # ---------------------------------------------------------------------------
 
-def cushion_zeros(cfg: ModelConfig, m: int, dtype=jnp.float32) -> Params:
+def cushion_zeros(cfg: ModelConfig, m: int, dtype=None) -> Params:
+    # default to the model compute dtype: the artifact must match what
+    # extract_cushion emits so serving's bit-identical cushion-rewrite
+    # guarantee holds (a bf16 model keeps a bf16 cushion)
+    dtype = C.dtype_of(cfg) if dtype is None else dtype
     K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
     return {"kv": {"k": jnp.zeros((L, m, K, hd), dtype),
                    "v": jnp.zeros((L, m, K, hd), dtype)}}

@@ -355,9 +355,11 @@ def cache_roles(cfg: ModelConfig, kv_dtype=None,
                   "h": (None, "B", None, "M"), "m": (None, "B", None, "M")}}
 
 
-def cushion_zeros(cfg: ModelConfig, m: int, dtype=jnp.float32) -> Params:
+def cushion_zeros(cfg: ModelConfig, m: int, dtype=None) -> Params:
     """CushionState: trainable initial state (batch-free; broadcast at use).
-    `m` (prefix length) has no direct meaning here; state size is fixed."""
+    `m` (prefix length) has no direct meaning here; state size is fixed.
+    Defaults to the model compute dtype (see transformer.cushion_zeros)."""
+    dtype = C.dtype_of(cfg) if dtype is None else dtype
     P = n_pairs(cfg)
     inner, NH, hd = dims(cfg)
     return {"state": {

@@ -63,6 +63,42 @@ def count_compiles() -> Iterator[CompileCounter]:
         _active.remove(c)
 
 
+@dataclasses.dataclass
+class HostSyncCounter:
+    count: int = 0
+
+
+_sync_active: List["HostSyncCounter"] = []
+
+
+@contextlib.contextmanager
+def count_host_syncs() -> Iterator[HostSyncCounter]:
+    """Count blocking device->host transfers routed through `host_sync`
+    inside the ``with`` block. jax.monitoring has no transfer event, so
+    accounting works by convention: host-loop code that must block on
+    device values (the prefix-tuning metric drain) fetches them through
+    `host_sync` instead of calling ``float(...)`` / ``np.asarray`` per
+    value, and regression tests bound the count. Counters nest like
+    `count_compiles`."""
+    c = HostSyncCounter()
+    _sync_active.append(c)
+    try:
+        yield c
+    finally:
+        _sync_active.remove(c)
+
+
+def host_sync(tree):
+    """THE accounting choke point for intentional blocking transfers:
+    one call = one device->host round trip (``jax.device_get`` fetches the
+    whole tree in a single batch). Dispatch-blocking per-step ``float(v)``
+    conversions were the original prefix_tune perf bug — anything tempted
+    to sync in a loop should batch values and come through here."""
+    for c in _sync_active:
+        c.count += 1
+    return jax.device_get(tree)
+
+
 def resident_weight_bytes(params) -> tuple:
     """(fp_bytes, int8_bytes) of a served parameter tree — how many bytes
     per weight the decode loop streams from HBM. A prequantized tree

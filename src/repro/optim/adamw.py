@@ -29,6 +29,12 @@ class AdamW:
     # decay mask: paths matching these substrings get no weight decay
     no_decay: tuple = ("ln", "norm", "bias", "b_if", "dt_b", "A_log",
                        "Dskip", "/g", "/b")
+    # freeze mask: paths matching these substrings are passed through
+    # BIT-IDENTICALLY (no fp32 round trip, no moment update) and excluded
+    # from the global-norm clip. Used by cushioncache.prefix_tune to train
+    # only the kv block of a mixed cushion artifact (hybrid recurrent
+    # "state" leaves ride along untouched).
+    frozen: tuple = ()
 
     def init(self, params: Any) -> AdamWState:
         z = lambda p: jax.tree_util.tree_map(
@@ -42,7 +48,19 @@ class AdamW:
         return jax.tree_util.tree_map(
             lambda p: not any(s in p for s in self.no_decay), paths)
 
+    def _frozen_mask(self, params: Any) -> Any:
+        from repro.distributed.sharding import tree_paths
+        paths = tree_paths(params)
+        return jax.tree_util.tree_map(
+            lambda p: any(s in p for s in self.frozen), paths)
+
     def update(self, grads: Any, state: AdamWState, params: Any):
+        frozen = self._frozen_mask(params) if self.frozen else None
+        if frozen is not None:
+            # frozen leaves contribute nothing to the global norm (their
+            # grads are typically exact zeros from stop_gradient anyway)
+            grads = jax.tree_util.tree_map(
+                lambda g, f: jnp.zeros_like(g) if f else g, grads, frozen)
         # global-norm clip
         if self.grad_clip > 0:
             gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -76,9 +94,15 @@ class AdamW:
         flat_m = treedef.flatten_up_to(state.mu)
         flat_v = treedef.flatten_up_to(state.nu)
         flat_mask = treedef.flatten_up_to(mask)
+        flat_fz = (treedef.flatten_up_to(frozen) if frozen is not None
+                   else [False] * len(flat_p))
         new_p, new_m, new_v = [], [], []
-        for g, m, v, p, dk in zip(flat_g, flat_m, flat_v, flat_p, flat_mask):
-            pn, mn, vn = upd(g, m, v, p, dk)
+        for g, m, v, p, dk, fz in zip(flat_g, flat_m, flat_v, flat_p,
+                                      flat_mask, flat_fz):
+            if fz:
+                pn, mn, vn = p, m, v    # bit-identical passthrough
+            else:
+                pn, mn, vn = upd(g, m, v, p, dk)
             new_p.append(pn)
             new_m.append(mn)
             new_v.append(vn)

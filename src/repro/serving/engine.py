@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.configs.base import QuantConfig
 from repro.core import quantization as Q
+from repro.core.calibration import CalibratedScales
+from repro.core.cushioncache import cushion_fingerprint
 from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
 from repro.monitoring import resident_weight_bytes
@@ -61,7 +63,24 @@ def plan_quantization(api, params, qcfg: QuantConfig, cushion=None,
       (``core.quantization.prequantize_tree``) so decode streams
       1 byte/weight; requires the pt_static deployment mode. The fp-weight
       path (prequant=False) stays available as the A/B baseline.
+    * precomputed ``scales`` carrying cushion provenance
+      (``core.calibration.CalibratedScales`` — `calibrate_tagged`, tune
+      artifacts) are fingerprint-checked against the cushion actually
+      being served and REJECTED on mismatch. A tuned cushion shifts the
+      activation distribution the static ranges were fit to; serving the
+      stale pair produces silently-wrong ranges, so the plan hard-fails
+      and demands recalibration (or the matching artifact) instead.
     """
+    if isinstance(scales, CalibratedScales):
+        want, got = scales.cushion_fp, cushion_fingerprint(cushion)
+        if want != got:
+            raise ValueError(
+                f"stale pt_static scales: calibrated under cushion "
+                f"{want[:12]} but asked to serve cushion {got[:12]}; "
+                f"recalibrate under the serving cushion (pass "
+                f"calib_batches=) or load the matching tune artifact — "
+                f"refusing to serve mismatched static ranges")
+        scales = scales.scales
     if qcfg.mode == "pt_static" and scales is None:
         if calib_batches is None:
             raise ValueError(
@@ -161,6 +180,8 @@ class Engine:
         self.max_seq = cache_seq_len(max_seq)
         self.kv_dtype = kv_dtype
         self.prefix_len = cushion_prefix_len(cushion)
+        # served-cushion provenance, for logs and artifact cross-checks
+        self.cushion_fp = cushion_fingerprint(cushion)
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
                                         scales=scales))

@@ -130,7 +130,8 @@ from repro.distributed import sharding as SH
 from repro.models.registry import ModelAPI
 from repro.monitoring import ServeStats, resident_weight_bytes
 from repro.serving.engine import (bucket_steps, cache_seq_len,
-                                  cushion_prefix_len, plan_quantization,
+                                  cushion_fingerprint, cushion_prefix_len,
+                                  plan_quantization,
                                   shard_params_for_serving)
 from repro.serving.paging import PagePool
 
@@ -243,6 +244,9 @@ class ContinuousEngine:
         self.scales = scales
         self.kv_dtype = kv_dtype
         self.prefix_len = cushion_prefix_len(cushion)
+        # served-cushion provenance (matches Engine.cushion_fp, so a router
+        # or launcher can assert every replica serves the same artifact)
+        self.cushion_fp = cushion_fingerprint(cushion)
         axes = dict(api.cache_batch_axes)   # raises for unsupported families
         # recurrent-only caches (ssm) have no sequence axis: the pool never
         # runs out of positions — the max_seq admission capacity check only

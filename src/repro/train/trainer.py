@@ -80,6 +80,34 @@ def make_train_step(api: ModelAPI, run: RunConfig, opt: AdamW,
     return train_step
 
 
+def replicated_shardings(tree: Any, mesh: Mesh) -> Any:
+    """Every leaf fully replicated across `mesh` — the layout for small
+    trainable trees (the cushion KV block and its optimizer moments) that
+    ride a data axis for batch parallelism only."""
+    rep = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda _: rep, tree)
+
+
+def shard_update_step(step_fn: Callable, mesh: Mesh, var_shardings: Any,
+                      opt_shardings: Any, batch_like: Any = None):
+    """jit-compile an ``(vars, opt_state, batch) -> (vars, opt_state,
+    metrics)`` update step for `mesh`: carried state in/out under the given
+    shardings and DONATED (compile-once, no per-step copies), batch leaves
+    split on the "data" axis when `batch_like` (arrays or ShapeDtypeStructs;
+    only ndim matters) is given. Shared by `shard_train_step` (FSDP param
+    shardings) and `cushioncache.prefix_tune` (replicated cushion)."""
+    if batch_like is None:
+        b_sh = None
+    else:
+        b_sh = jax.tree_util.tree_map(
+            lambda x: SH.batch_sharding(mesh, x.ndim), batch_like)
+    return jax.jit(
+        step_fn,
+        in_shardings=(var_shardings, opt_shardings, b_sh),
+        out_shardings=(var_shardings, opt_shardings, None),
+        donate_argnums=(0, 1))
+
+
 def shard_train_step(api: ModelAPI, run: RunConfig, opt: AdamW, mesh: Mesh,
                      params_abstract: Any, microbatches: int = 1,
                      cushion: Any = None, scales: Any = None):
@@ -92,15 +120,7 @@ def shard_train_step(api: ModelAPI, run: RunConfig, opt: AdamW, mesh: Mesh,
         mu=SH.params_shardings(opt_abstract.mu, mesh),
         nu=SH.params_shardings(opt_abstract.nu, mesh))
     step_fn = make_train_step(api, run, opt, microbatches, cushion, scales)
-    b_sh = lambda x: SH.batch_sharding(mesh, x.ndim)
-    batch_shardings = {"tokens": b_sh(jax.ShapeDtypeStruct((1, 1), jnp.int32)),
-                       "labels": b_sh(jax.ShapeDtypeStruct((1, 1), jnp.int32))}
-
-    fn = jax.jit(
-        step_fn,
-        in_shardings=(p_sh, o_sh, None),
-        out_shardings=(p_sh, o_sh, None),
-        donate_argnums=(0, 1))
+    fn = shard_update_step(step_fn, mesh, p_sh, o_sh)
     return fn, p_sh, o_sh
 
 

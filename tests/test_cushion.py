@@ -95,8 +95,12 @@ def test_cushion_reduces_qerr_on_outlier_model(tiny):
     qerr_fn = CC.make_qerr_fn(api, QD)
     base = float(qerr_fn(params, jnp.asarray([], jnp.int32), b))
 
+    # tune_lr at the config default: the activation-range objective is a
+    # sharp/noisy landscape around the greedy optimum — per-coordinate Adam
+    # steps of 3e-2 overshoot it and walk the cushion away from the sink
+    # configuration the greedy stage found (loss visibly diverges)
     ccfg = CushionConfig(max_prefix_len=4, tau=1.0, n_candidates=16,
-                         tune_steps=30, tune_lr=3e-2, lam=1.0,
+                         tune_steps=30, tune_lr=1e-3, lam=0.1,
                          seed_tokens=(1,))
 
     def batches():
