@@ -30,6 +30,34 @@ def suggest(dom: str, rec: Dict) -> str:
     return base
 
 
+def weight_stream_point(weight_bytes: Dict[str, int],
+                        tpot_ms: Dict[str, float],
+                        baseline: str = "fp") -> Dict[str, Dict[str, float]]:
+    """Weight-streaming roofline point for quantized decode.
+
+    Decode at batch ~1-8 is bound by streaming the resident weights from
+    HBM once per token, so the bandwidth-bound model predicts a speedup
+    over ``baseline`` equal to the resident-byte ratio (fp32 -> int8 = 4x,
+    fp32 -> int4-packed = 8x). Pairs that prediction with the measured
+    TPOT ratio per variant so bench JSON records predicted vs measured —
+    CPU CI won't hit the HBM roof (the int dot is compute-limited there),
+    but the byte ratios are the invariant the gate checks.
+
+    weight_bytes / tpot_ms: variant name -> total resident bytes / measured
+    per-token latency; both must contain ``baseline``.
+    """
+    base_b, base_t = weight_bytes[baseline], tpot_ms[baseline]
+    out = {}
+    for name, nbytes in weight_bytes.items():
+        out[name] = {
+            "resident_bytes": float(nbytes),
+            "bytes_ratio_vs_%s" % baseline: nbytes / base_b,
+            "predicted_decode_speedup": base_b / max(1, nbytes),
+            "measured_decode_speedup": base_t / tpot_ms[name],
+        }
+    return out
+
+
 def load(path: str) -> List[Dict]:
     rows = []
     with open(path) as f:

@@ -136,11 +136,75 @@ def weight_fake_quant(w: Array, cfg: QuantConfig) -> Array:
 def weight_quant_int(w: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
     """True-int path needs a single per-tensor weight scale so the dequant is
     one scalar multiply in the matmul epilogue (per-tensor static deployment).
-    Returns (w_int8, scale)."""
+    Returns (w_int8, scale).
+
+    Sub-8-bit range convention: every quantizer here goes through ``qrange``,
+    whose symmetric range is *restricted* — [-(2^(b-1)-1), 2^(b-1)-1], i.e.
+    [-7, 7] at 4 bits, never the full two's-complement [-8, 7]. The int4
+    packed format stores nibbles that could hold -8, but the quantizers never
+    emit it; tests/test_quantization.py pins this so fake-quant calibration
+    and true packed inference stay on the same grid."""
     amax = jnp.max(jnp.abs(w))
     scale, _ = params_from_minmax(-amax, amax, cfg.w_bits, True)
     wq = quantize(w, scale, jnp.zeros(()), cfg.w_bits, True).astype(jnp.int8)
     return wq, scale
+
+
+def weight_quant_int4(w: Array, cfg: QuantConfig
+                      ) -> Tuple[Array, Array, int]:
+    """Group-wise symmetric int4 weight quantization (the W4A8 true path).
+
+    Unlike ``weight_quant_int`` (per-tensor — fine at 8 bits), 4-bit needs
+    the *same group-wise scales as* ``weight_fake_quant``: a single
+    per-tensor scale loses too much range, and — the satellite-1 fix — a
+    granularity mismatch between calibration (fake-quant, group-wise) and
+    serving (true packed) would make the two paths disagree. Using the
+    identical group/amax/scale computation makes
+    ``dequant(unpack(pack(wq))) == weight_fake_quant(w)`` bit-for-bit.
+
+    w: (d_in, d_out). Returns (wq, scale, group_size) with wq (d_in, d_out)
+    int8 holding values in the restricted [-7, 7] range and scale
+    (n_groups, d_out) fp32. Groups tile d_in; ``cfg.w_group`` is used when
+    it divides d_in, else one group spans the whole axis (mirroring
+    ``weight_fake_quant``)."""
+    d_in, d_out = w.shape
+    g = cfg.w_group if cfg.w_group and d_in % cfg.w_group == 0 else d_in
+    wg = w.reshape(d_in // g, g, d_out)
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)        # (G,1,N)
+    scale, zero = params_from_minmax(-amax, amax, 4, True)
+    wq = quantize(wg, scale, zero, 4, True).astype(jnp.int8)
+    return wq.reshape(d_in, d_out), scale[:, 0, :], g
+
+
+# ---------------------------------------------------------------------------
+# int4 packing: two nibbles per byte along the contracting dim
+# ---------------------------------------------------------------------------
+
+def pack_int4(wq: Array) -> Array:
+    """Pack int4 values (int8 storage, [-8, 7]) along axis 0, two per byte:
+    element 2i lands in the LOW nibble of byte i, element 2i+1 in the HIGH
+    nibble (interleaved layout — unpack is a stack+reshape, no shuffle).
+    Odd-length axes get a zero nibble of padding; ``unpack_int4(p, k)``
+    slices it back off. Returns int8 of shape (ceil(K/2), ...)."""
+    K = wq.shape[0]
+    if K % 2:
+        wq = jnp.pad(wq, [(0, 1)] + [(0, 0)] * (wq.ndim - 1))
+    lo = jax.lax.bitcast_convert_type(wq[0::2], jnp.uint8) & 0xF
+    hi = jax.lax.bitcast_convert_type(wq[1::2], jnp.uint8) & 0xF
+    return jax.lax.bitcast_convert_type(lo | (hi << 4), jnp.int8)
+
+
+def unpack_int4(packed: Array, k: int) -> Array:
+    """Inverse of ``pack_int4``: (ceil(k/2), ...) int8 -> (k, ...) int8 with
+    sign-extended nibbles. Arithmetic shifts in int32 recover both nibbles:
+    the low one via sign-extension from bit 3, the high one via
+    floor-division (arithmetic >> 4 of the two's-complement byte)."""
+    p = packed.astype(jnp.int32)
+    lo = (p << 28) >> 28
+    hi = p >> 4
+    w = jnp.stack([lo, hi], axis=1)                  # (Kp, 2, ...)
+    w = w.reshape(w.shape[0] * 2, *packed.shape[1:])
+    return w[:k].astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +233,17 @@ def _use_w8a8_kernel() -> bool:
     if flags.W8A8_KERNEL == "pallas":
         return True
     if flags.W8A8_KERNEL == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _use_w4a8_kernel() -> bool:
+    """Same routing contract for the int4-packed ``w4a8_matmul`` kernel
+    (REPRO_W4A8_KERNEL=auto|pallas|jnp)."""
+    from repro import flags
+    if flags.W4A8_KERNEL == "pallas":
+        return True
+    if flags.W4A8_KERNEL == "jnp":
         return False
     return jax.default_backend() == "tpu"
 
@@ -250,6 +325,54 @@ def _int8_matmul(xq: Array, w_int: Array, s_x, z_x, s_w,
                    * jnp.asarray(s_w, jnp.float32))).astype(out_dtype)
 
 
+def _int4_matmul(xq: Array, w_packed: Array, s_x, z_x, s_w,
+                 colsum: Array, out_dtype) -> Array:
+    """int8 activations x int4-packed weights with group-wise weight scales:
+
+      out = s_x * ( sum_g s_w[g,:] * (X_int[:, g] @ W_int[g, :])
+                    - z_x * colsum_scaled )
+
+    where g ranges over contiguous groups of the contracting dim and
+    ``colsum_scaled[n] = sum_g s_w[g,n] * colsum_g[n]`` is precomputed at
+    prequantize time (the zero-point correction already carries the group
+    scales, so the epilogue stays one rank-1 subtract exactly like W8A8).
+
+    On TPU (or REPRO_W4A8_KERNEL=pallas) the unpack + product + epilogue run
+    in the Pallas ``w4a8_matmul`` kernel — nibbles stream HBM->VMEM at
+    0.5 byte/weight and are sign-extended in VMEM. The jnp fallback unpacks,
+    folds the group scales into the weight columns once per call, and runs a
+    single f32 GEMM — the same product shape as the W8A8 CPU path, so
+    prefill TTFT stays in the fp ballpark (a grouped batched einsum was
+    ~1.6x fp on the bench). Folding trades the grouped path's integer
+    exactness for one extra f32 rounding per weight element (~1e-7
+    relative); the kernel accumulates per-group like the grouped form, and
+    the two routes agree to f32-accumulation tolerance, not bit-identically.
+    """
+    K = xq.shape[-1]
+    G = s_w.shape[0]
+    assert K % G == 0, f"groups ({G}) must tile the contracting dim ({K})"
+    group = K // G
+    N = w_packed.shape[-1]
+    lead = xq.shape[:-1]
+    if _use_w4a8_kernel() and w_packed.ndim == 2 and jnp.ndim(s_x) == 0:
+        from repro.kernels.w4a8_matmul import w4a8_matmul
+        M = 1
+        for d in lead:
+            M *= d
+        out = w4a8_matmul(
+            xq.reshape(M, K), w_packed, s_x, z_x, s_w, colsum,
+            group_size=group, bm=256, bn=_tile(N, 512),
+            interpret=jax.default_backend() != "tpu")
+        return out.reshape(*lead, N).astype(out_dtype)
+    wq = unpack_int4(w_packed, K)                          # (K, N) int8
+    wdq = wq.astype(jnp.float32).reshape(G, group, N) \
+        * s_w.astype(jnp.float32)[:, None, :]
+    acc = jnp.einsum("...k,kn->...n", xq.astype(jnp.float32),
+                     wdq.reshape(K, N))
+    acc = acc - jnp.asarray(z_x, jnp.float32) * colsum.astype(jnp.float32)
+    return (acc * jnp.asarray(s_x, jnp.float32)).astype(out_dtype)
+
+
 def true_int_dot(x: Array, w: Array, cfg: QuantConfig,
                  site: Optional[SiteScale]) -> Array:
     """int8 x int8 -> int32 matmul with scalar-epilogue dequant (see
@@ -282,7 +405,12 @@ def prequantized_int_dot(x: Array, w: Dict[str, Array], cfg: QuantConfig,
     weight requantization, no bf16 dequant materialization. The stored
     colsum feeds the zero-point correction without re-reducing the weight.
     Requires calibrated static scales (``site``): per-tensor static W8A8 is
-    the deployment configuration the CushionCache prefix rescues."""
+    the deployment configuration the CushionCache prefix rescues.
+
+    Two resident formats, distinguished by key: ``w_int`` (int8, 1 B/weight)
+    routes through ``_int8_matmul``; ``w_packed`` (int4 nibbles, 0.5
+    B/weight, group-wise scales) through ``_int4_matmul``. Activations are
+    int8 in both — W4A8 narrows the weights only."""
     if cfg.mode != "pt_static" or site is None:
         raise ValueError(
             "prequantized (int8-resident) weights serve the pt_static "
@@ -295,11 +423,33 @@ def prequantized_int_dot(x: Array, w: Dict[str, Array], cfg: QuantConfig,
         xq = xq - off
         z_x = z_x - off
     xq = xq.astype(jnp.int8)
+    if "w_packed" in w:
+        return _int4_matmul(xq, w["w_packed"], s_x, z_x, w["w_scale"],
+                            w["colsum"], x.dtype)
     return _int8_matmul(xq, w["w_int"], s_x, z_x, w["w_scale"],
                         w["colsum"], x.dtype)
 
 
-def prequantize(w: Array, cfg: QuantConfig) -> Dict[str, Array]:
+def prequantize(w: Array, cfg: QuantConfig,
+                weight_bits: int = 8) -> Dict[str, Array]:
+    """Quantize one (d_in, d_out) weight into its resident serving dict.
+
+    weight_bits=8: {"w_int" int8 (K,N), "w_scale" scalar, "colsum" (N,)
+    int32} — per-tensor scale, raw column sums.
+    weight_bits=4: {"w_packed" int8 (ceil(K/2),N) nibble-packed, "w_scale"
+    (G,N) group-wise, "colsum" (N,) f32 *scaled* column sums
+    sum_g s_w[g,n]*colsum_g[n]} — the scales ride in the colsum so the
+    kernel epilogue stays a rank-1 subtract."""
+    if weight_bits == 4:
+        wq, scale, g = weight_quant_int4(w, cfg)
+        G = w.shape[0] // g
+        colsum_g = jnp.sum(
+            wq.astype(jnp.int32).reshape(G, g, -1), axis=1)    # (G, N)
+        colsum = jnp.sum(colsum_g.astype(jnp.float32) * scale, axis=0)
+        return {"w_packed": pack_int4(wq), "w_scale": scale,
+                "colsum": colsum}
+    if weight_bits != 8:
+        raise ValueError(f"weight_bits must be 8 or 4, got {weight_bits}")
     wq, scale = weight_quant_int(w, cfg)
     return {"w_int": wq, "w_scale": scale,
             "colsum": jnp.sum(wq.astype(jnp.int32), axis=0)}
@@ -310,13 +460,17 @@ _PREQUANT_KEYS = ("wqkv", "wo", "w_up", "w_gate", "w_down", "w_in", "w_out",
 
 
 def prequantize_tree(params: Any, cfg: QuantConfig,
-                     min_ndim: int = 2) -> Any:
-    """Replace qdot-consumed weight matrices with int8-resident Quantized
-    dicts. Only keys consumed via `qlinear`/`qdot` are converted (MoE
-    expert/gate projections consumed by raw einsums — and the Arctic dense
-    residual branch living under the same ``moe`` subtree — keep fp);
+                     min_ndim: int = 2, weight_bits: int = 8) -> Any:
+    """Replace qdot-consumed weight matrices with int-resident Quantized
+    dicts (int8 ``w_int`` or, with ``weight_bits=4``, nibble-packed
+    ``w_packed``). Only keys consumed via `qlinear`/`qdot` are converted
+    (MoE expert/gate projections consumed by raw einsums — and the Arctic
+    dense residual branch living under the same ``moe`` subtree — keep fp);
     embeddings stay fp (gather lookups). Hybrid period params nest their
     sublayers in lists; those are descended too."""
+    if weight_bits not in (8, 4):
+        raise ValueError(f"weight_bits must be 8 or 4, got {weight_bits}")
+
     def eligible(k, v, path):
         if not (hasattr(v, "ndim") and v.ndim >= min_ndim):
             return False
@@ -328,8 +482,11 @@ def prequantize_tree(params: Any, cfg: QuantConfig,
 
     def convert(v):
         if v.ndim == 2:
-            return prequantize(v, cfg)
+            return prequantize(v, cfg, weight_bits=weight_bits)
         # stacked over layers/periods: quantize per layer slice
+        if weight_bits == 4:
+            return jax.vmap(
+                lambda a: prequantize(a, cfg, weight_bits=4))(v)
         wq, scale = jax.vmap(lambda a: weight_quant_int(a, cfg))(v)
         return {"w_int": wq, "w_scale": scale,
                 "colsum": jnp.sum(wq.astype(jnp.int32), axis=-2)}
@@ -353,7 +510,7 @@ def prequantize_tree(params: Any, cfg: QuantConfig,
 def qdot(x: Array, w: Any, cfg: QuantConfig,
          site: Optional[SiteScale] = None) -> Array:
     """Quantized x @ w. ``w`` is (d_in, d_out) / (..., d_in, d_out), or a
-    prequantized {"w_int", "w_scale", "colsum"} dict."""
+    prequantized {"w_int" | "w_packed", "w_scale", "colsum"} dict."""
     if isinstance(w, dict):
         return prequantized_int_dot(x, w, cfg, site)
     if cfg.mode == "none":

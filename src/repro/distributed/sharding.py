@@ -157,13 +157,18 @@ def _drop_indivisible(full: Sequence[Any], shape: Tuple[int, ...],
 
 def rules_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
                 rules=DEFAULT_RULES) -> P:
-    # int8-resident (prequantized) {w_int, w_scale, colsum} leaves: w_int
-    # shards exactly like its fp parent weight (the rules match the parent
-    # path), the (N,)-shaped colsum follows the parent's OUTPUT axis (it is
-    # a per-output-column reduction — the zero-point correction must stay
-    # local to the shard that owns those columns), and the scalar/stacked
-    # w_scale replicates.
-    path = re.sub(r"/w_int$", "", path)
+    # int-resident (prequantized) {w_int | w_packed, w_scale, colsum}
+    # leaves: w_int/w_packed shard exactly like their fp parent weight (the
+    # rules match the parent path), the (N,)-shaped colsum follows the
+    # parent's OUTPUT axis (it is a per-output-column reduction — the
+    # zero-point correction must stay local to the shard that owns those
+    # columns), and the scalar/group w_scale replicates. For w_packed the
+    # contracting axis holds K/2 nibble-pair rows: under the serve rules
+    # that axis is unsharded anyway ("D" roles nulled), and under training
+    # rules a packed K/2 that no longer divides the mesh axis is dropped to
+    # replicated by _drop_indivisible — divisibility is handled, never
+    # silently padded.
+    path = re.sub(r"/w_(int|packed)$", "", path)
     if path.endswith("/w_scale"):
         return P()
     mcol = re.match(r"^(.*)/colsum$", path)

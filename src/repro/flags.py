@@ -35,3 +35,10 @@ DECODE_KERNEL = os.environ.get("REPRO_DECODE_KERNEL", "auto")
 # "pallas" / "jnp" force either path (forced Pallas runs in interpret mode
 # off-TPU — validation only).
 W8A8_KERNEL = os.environ.get("REPRO_W8A8_KERNEL", "auto")
+
+# int4-packed weight matmul routing for the W4A8 serving path
+# (core.quantization._int4_matmul): "auto" = the Pallas w4a8_matmul kernel
+# (unpack-in-VMEM) on TPU backends, exact grouped jnp product elsewhere;
+# "pallas" / "jnp" force either path (forced Pallas runs in interpret mode
+# off-TPU — validation only).
+W4A8_KERNEL = os.environ.get("REPRO_W4A8_KERNEL", "auto")

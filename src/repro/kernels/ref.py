@@ -18,6 +18,29 @@ def w8a8_matmul_ref(x_int: jax.Array, w_int: jax.Array, s_x: jax.Array,
     return acc * (s_x * s_w)
 
 
+def w4a8_matmul_ref(x_int: jax.Array, w_packed: jax.Array, s_x: jax.Array,
+                    z_x: jax.Array, s_w: jax.Array,
+                    group_size: int) -> jax.Array:
+    """Oracle for the int4-packed kernel: dense unpack, per-group int32
+    products, f32 scale combine. x_int: (M,K) int8; w_packed: (K//2,N) int8
+    nibble pairs (core.quantization.pack_int4 layout); s_x/z_x scalar;
+    s_w: (K//group_size, N) group scales. Returns fp32
+    (M,N) = s_x * sum_g s_w[g] * (x[:,g] - z_x) @ w[g]."""
+    from repro.core.quantization import unpack_int4
+    M, K = x_int.shape
+    N = w_packed.shape[1]
+    G = K // group_size
+    w_int = unpack_int4(w_packed, K)                       # (K, N) int8
+    xg = x_int.reshape(M, G, group_size)
+    wg = w_int.reshape(G, group_size, N)
+    parts = jax.lax.dot_general(
+        xg, wg, (((2,), (1,)), ((1,), (0,))),              # (G, M, N)
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    colsum_g = jnp.sum(wg.astype(jnp.int32), axis=1)       # (G, N)
+    parts = parts - z_x * colsum_g[:, None, :].astype(jnp.float32)
+    return s_x * jnp.einsum("gmn,gn->mn", parts, s_w.astype(jnp.float32))
+
+
 def act_quant_ref(x: jax.Array, bits: int = 8, per_token: bool = False):
     """Asymmetric quantize; returns (x_int8, scale, zero). Static path takes
     precomputed scale/zero via act_quant_static_ref."""

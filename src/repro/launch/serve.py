@@ -209,11 +209,16 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
                            else args.kv_dtype,
                            calib_batches=calib_batches,
                            prequant=args.prequant,
+                           weight_bits=args.weight_bits,
                            paged=args.paged, page_size=args.page_size,
                            n_pages=args.pages,
                            prefix_cache=args.prefix_cache,
                            chunk_tokens=args.chunk_tokens)
-    if eng.chunk_tokens:
+    if eng.chunk_auto:
+        print(f"[serve] chunked prefill: adaptive budget "
+              f"(decode-pressure-scaled, max {eng.chunk_tokens} "
+              f"tokens/chunk)")
+    elif eng.chunk_tokens:
         print(f"[serve] chunked prefill: {eng.chunk_tokens} tokens/chunk "
               f"(budget bucketed from --chunk-tokens {args.chunk_tokens})")
     if cushion is not None:
@@ -221,7 +226,8 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
               f"(prefix_len={eng.prefix_len})")
     print(f"[serve] resident weights: "
           f"fp={eng.stats.weight_bytes_fp / 2 ** 20:.1f} MiB "
-          f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB")
+          f"int8={eng.stats.weight_bytes_int8 / 2 ** 20:.1f} MiB "
+          f"int4={eng.stats.weight_bytes_int4 / 2 ** 20:.1f} MiB")
     if args.paged:
         st = eng.stats
         print(f"[serve] paged pool: {st.pages_total} pages x "
@@ -262,6 +268,7 @@ def run_continuous(api, params, qcfg, args, bench_path=None, mesh=None,
     if bench_path:
         point = {"mode": "continuous", "arch": args.arch,
                  "quant": args.quant, "prequant": args.prequant,
+                 "weight_bits": args.weight_bits,
                  "paged": args.paged, "page_size": args.page_size,
                  "prefix_cache": args.prefix_cache,
                  "kv_dtype": args.kv_dtype, "slots": args.slots,
@@ -304,6 +311,7 @@ def run_router(api, params, qcfg, args, bench_path=None, calib_batches=None,
         cushion=cushion, scales=scales,
         kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
         calib_batches=calib_batches, prequant=args.prequant,
+        weight_bits=args.weight_bits,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens)
     res = router.run(reqs, injector=injector)
@@ -351,6 +359,13 @@ def _append_point(path: str, point: dict) -> None:
     with open(path, "w") as f:
         json.dump(hist, f, indent=1)
     print(f"[serve] bench point -> {path}")
+
+
+def _chunk_tokens_arg(v: str):
+    """--chunk-tokens value: an int budget or 'auto' (adaptive)."""
+    if v == "auto":
+        return v
+    return int(v)
 
 
 def main(argv=None):
@@ -431,15 +446,23 @@ def main(argv=None):
                          "site scales at load, prequantize the param tree "
                          "(1 byte/weight streamed into the W8A8 matmul "
                          "path); requires --quant pt_static")
+    ap.add_argument("--weight-bits", type=int, default=8, choices=[8, 4],
+                    help="resident weight precision with --prequant: 8 = "
+                         "int8 w_int (W8A8), 4 = nibble-packed w_packed "
+                         "(W4A8, 0.5 byte/weight through the unpack-in-"
+                         "VMEM kernel); activations stay int8 either way")
     ap.add_argument("--calib-batches", type=int, default=2,
                     help="pt_static: number of calibration batches drawn "
                          "from the synthetic pipeline at engine load")
-    ap.add_argument("--chunk-tokens", type=int, default=None,
+    ap.add_argument("--chunk-tokens", type=_chunk_tokens_arg, default=None,
                     help="chunked admission prefill: per-step token budget "
                          "(bucketed to a power of two); prompts longer "
                          "than one budget prefill one chunk per decode "
                          "step instead of blocking the whole pool — short "
-                         "prompts admit between a long prompt's chunks")
+                         "prompts admit between a long prompt's chunks. "
+                         "'auto' adapts the budget to decode pressure "
+                         "(big chunks when idle, small when slots are "
+                         "near-full)")
     ap.add_argument("--bench-json", default=None,
                     help="append a trajectory point to this file")
     args = ap.parse_args(argv)
@@ -449,6 +472,9 @@ def main(argv=None):
     if args.prequant and args.quant != "pt_static":
         ap.error("--prequant requires --quant pt_static (int8-resident "
                  "weights serve the per-tensor static deployment path)")
+    if args.weight_bits == 4 and not args.prequant:
+        ap.error("--weight-bits 4 requires --prequant (the int4-packed "
+                 "format only exists as resident serving weights)")
     if (args.replicas > 1 or args.chaos) and args.mode != "continuous":
         ap.error("--replicas/--chaos require --mode continuous (the "
                  "router fronts ContinuousEngine replicas)")
@@ -533,10 +559,12 @@ def main(argv=None):
                  max_seq=args.prompt_len + args.tokens + 32,
                  cushion=cushion, scales=art_scales,
                  kv_dtype=None if args.kv_dtype == "fp" else args.kv_dtype,
-                 mesh=mesh, calib_batches=calib, prequant=args.prequant)
+                 mesh=mesh, calib_batches=calib, prequant=args.prequant,
+                 weight_bits=args.weight_bits)
     print(f"[serve] resident weights: "
           f"fp={eng.weight_bytes_fp / 2 ** 20:.1f} MiB "
-          f"int8={eng.weight_bytes_int8 / 2 ** 20:.1f} MiB")
+          f"int8={eng.weight_bytes_int8 / 2 ** 20:.1f} MiB "
+          f"int4={eng.weight_bytes_int4 / 2 ** 20:.1f} MiB")
     if args.bench_json:
         eng.generate(batch, args.tokens)     # warm/compile: the recorded
         # point must measure steady-state decode, not scan-loop tracing
@@ -548,11 +576,13 @@ def main(argv=None):
     if args.bench_json:
         _append_point(args.bench_json, {
             "mode": "static", "arch": args.arch, "quant": args.quant,
-            "prequant": args.prequant, "kv_dtype": args.kv_dtype,
+            "prequant": args.prequant, "weight_bits": args.weight_bits,
+            "kv_dtype": args.kv_dtype,
             "batch": args.batch, "tp": args.tp,
             "prompt_len": args.prompt_len, "tokens": args.tokens,
             "weight_bytes_fp": eng.weight_bytes_fp,
             "weight_bytes_int8": eng.weight_bytes_int8,
+            "weight_bytes_int4": eng.weight_bytes_int4,
             "ttft_ms": res.ttft_ms, "tpot_ms": res.tpot_ms})
     return res
 

@@ -100,23 +100,28 @@ def host_sync(tree):
 
 
 def resident_weight_bytes(params) -> tuple:
-    """(fp_bytes, int8_bytes) of a served parameter tree — how many bytes
-    per weight the decode loop streams from HBM. A prequantized tree
-    (core.quantization.prequantize_tree) holds its qdot-consumed matrices
-    as int8 ``w_int`` leaves (1 byte/weight vs 2-4 for bf16/fp32);
-    everything else (embeddings, norms, scales, MoE experts) counts as fp.
-    Surfaced in ``ServeStats`` and printed by launch/serve.py so the
-    fp-vs-W8A8 A/B shows its memory side, not just TTFT/TPOT."""
-    fp = i8 = 0
-    for leaf in jax.tree_util.tree_leaves(params):
+    """(fp_bytes, int8_bytes, int4_bytes) of a served parameter tree — how
+    many bytes per weight the decode loop streams from HBM. A prequantized
+    tree (core.quantization.prequantize_tree) holds its qdot-consumed
+    matrices as int8 ``w_int`` leaves (1 byte/weight vs 2-4 for bf16/fp32)
+    or nibble-packed int8 ``w_packed`` leaves (0.5 byte/weight, counted by
+    their packed size); everything else (embeddings, norms, scales, MoE
+    experts) counts as fp. Surfaced in ``ServeStats`` and printed by
+    launch/serve.py so the fp/W8A8/W4A8 A/B shows its memory side, not just
+    TTFT/TPOT."""
+    fp = i8 = i4 = 0
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in leaves:
         if not hasattr(leaf, "dtype"):
             continue
         n = int(leaf.size) * leaf.dtype.itemsize
-        if str(leaf.dtype) == "int8":
+        if path and "w_packed" in str(path[-1]):
+            i4 += n
+        elif str(leaf.dtype) == "int8":
             i8 += n
         else:
             fp += n
-    return fp, i8
+    return fp, i8, i4
 
 
 @dataclasses.dataclass
@@ -161,6 +166,7 @@ class ServeStats:
     interrupted: bool = False   # run ended by graceful drain
     weight_bytes_fp: int = 0    # resident fp param bytes (engine load)
     weight_bytes_int8: int = 0  # resident int8 (prequantized) param bytes
+    weight_bytes_int4: int = 0  # resident int4-packed param bytes (W4A8)
     pool_bytes: int = 0         # KV pool bytes (pages or dense rows)
     pages_total: int = 0        # page count incl. the reserved scratch page
     pages_free: int = 0         # allocator free-list size

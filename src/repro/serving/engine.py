@@ -38,16 +38,17 @@ from repro.monitoring import resident_weight_bytes
 def shard_params_for_serving(params, mesh):
     """Lay params out for inference on a tp mesh: TP-only serve rules
     (weights replicated over data/pod axes — FSDP sharding would all-gather
-    every weight per decoded token). Prequantized {w_int, w_scale, colsum}
-    leaves ride the same rules: w_int shards like its fp parent, colsum
-    follows the parent's output axis, scales replicate (sharding.rules_pspec)."""
+    every weight per decoded token). Prequantized {w_int | w_packed,
+    w_scale, colsum} leaves ride the same rules: the int weight shards like
+    its fp parent, colsum follows the parent's output axis, scales
+    replicate (sharding.rules_pspec)."""
     return jax.device_put(
         params, SH.params_shardings(params, mesh, SH.serve_rules()))
 
 
 def plan_quantization(api, params, qcfg: QuantConfig, cushion=None,
                       scales=None, calib_batches=None,
-                      prequant: bool = False):
+                      prequant: bool = False, weight_bits: int = 8):
     """Load-time quantization plan shared by ``Engine`` and
     ``ContinuousEngine``. Returns (params, scales) ready to serve:
 
@@ -91,12 +92,19 @@ def plan_quantization(api, params, qcfg: QuantConfig, cushion=None,
         from repro.core.calibration import calibrate
         scales, _ = calibrate(api, params, calib_batches, qcfg,
                               cushion=cushion)
+    if weight_bits not in (8, 4):
+        raise ValueError(f"weight_bits must be 8 or 4, got {weight_bits}")
+    if weight_bits == 4 and not prequant:
+        raise ValueError(
+            "weight_bits=4 is the int4-packed resident format and only "
+            "exists prequantized; pass prequant=True (fp and W8A8 remain "
+            "the A/B baselines)")
     if prequant:
         if qcfg.mode != "pt_static":
             raise ValueError(
                 f"prequant (int8-resident weights) serves the pt_static "
                 f"deployment mode only, got mode={qcfg.mode!r}")
-        params = Q.prequantize_tree(params, qcfg)
+        params = Q.prequantize_tree(params, qcfg, weight_bits=weight_bits)
     return params, scales
 
 
@@ -150,8 +158,10 @@ class Engine:
     calibrated here (under the cushion prefix) unless precomputed ones are
     passed; ``prequant=True`` additionally converts qdot-consumed weights
     to int8-resident {w_int, w_scale, colsum} dicts so decode streams
-    1 byte/weight through the W8A8 matmul path. ``weight_bytes_fp`` /
-    ``weight_bytes_int8`` report the resulting resident layout.
+    1 byte/weight through the W8A8 matmul path — or, with
+    ``weight_bits=4``, to int4-packed {w_packed, w_scale, colsum} dicts
+    (0.5 byte/weight, W4A8). ``weight_bytes_fp`` / ``weight_bytes_int8`` /
+    ``weight_bytes_int4`` report the resulting resident layout.
 
     ``mesh``: optional tp mesh (launch/mesh.py ``make_tp_mesh``). When set,
     params are laid out with the TP-only serve rules, the KV cache shards
@@ -164,16 +174,17 @@ class Engine:
     def __init__(self, api: ModelAPI, params, qcfg: QuantConfig,
                  cushion=None, scales=None, max_seq: int = 2048,
                  kv_dtype=None, mesh=None, calib_batches=None,
-                 prequant: bool = False):
+                 prequant: bool = False, weight_bits: int = 8):
         self.api = api
         self.mesh = mesh
         params, scales = plan_quantization(
             api, params, qcfg, cushion=cushion, scales=scales,
-            calib_batches=calib_batches, prequant=prequant)
+            calib_batches=calib_batches, prequant=prequant,
+            weight_bits=weight_bits)
         self.params = (shard_params_for_serving(params, mesh)
                        if mesh is not None else params)
-        self.weight_bytes_fp, self.weight_bytes_int8 = \
-            resident_weight_bytes(self.params)
+        (self.weight_bytes_fp, self.weight_bytes_int8,
+         self.weight_bytes_int4) = resident_weight_bytes(self.params)
         self.qcfg = qcfg
         self.cushion = cushion
         self.scales = scales

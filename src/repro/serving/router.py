@@ -172,7 +172,8 @@ class ReplicaRouter:
                  stats: Optional[RouterStats] = None,
                  meshes: Optional[Sequence[Any]] = None,
                  cushion=None, scales=None, calib_batches=None,
-                 prequant: bool = False, **engine_kwargs):
+                 prequant: bool = False, weight_bits: int = 8,
+                 **engine_kwargs):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if meshes is not None and len(meshes) != n_replicas:
@@ -183,7 +184,8 @@ class ReplicaRouter:
         # one shared plan: calibrate/prequantize once, replicate everywhere
         params, scales = plan_quantization(
             api, params, qcfg, cushion=cushion, scales=scales,
-            calib_batches=calib_batches, prequant=prequant)
+            calib_batches=calib_batches, prequant=prequant,
+            weight_bits=weight_bits)
         self.replicas = [
             _Replica(i, ContinuousEngine(
                 api, params, qcfg, cushion=cushion, scales=scales,

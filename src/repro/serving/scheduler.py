@@ -119,7 +119,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -218,6 +218,14 @@ def _scatter_row(dst, src, spec, slot):
         dst, src.astype(dst.dtype), slot, axis=spec)
 
 
+# adaptive chunked-prefill budget bounds (chunk_tokens="auto"): the
+# per-step budget slides between these with decode pressure — both ends of
+# the power-of-two bucket family, so auto mode compiles the same chunk
+# executables a fixed budget would
+_AUTO_CHUNK_MAX = 256
+_AUTO_CHUNK_MIN = 8
+
+
 class ContinuousEngine:
     """Continuous-batching counterpart of ``Engine`` (one compiled step
     executable shared by every pool composition; see module docstring)."""
@@ -226,15 +234,17 @@ class ContinuousEngine:
                  n_slots: int = 4, max_seq: int = 2048, cushion=None,
                  scales=None, stats: Optional[ServeStats] = None,
                  mesh=None, kv_dtype=None, calib_batches=None,
-                 prequant: bool = False, paged: bool = False,
+                 prequant: bool = False, weight_bits: int = 8,
+                 paged: bool = False,
                  page_size: int = 64, n_pages: Optional[int] = None,
                  prefix_cache: bool = False,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[Union[int, str]] = None):
         self.api = api
         self.mesh = mesh
         params, scales = plan_quantization(
             api, params, qcfg, cushion=cushion, scales=scales,
-            calib_batches=calib_batches, prequant=prequant)
+            calib_batches=calib_batches, prequant=prequant,
+            weight_bits=weight_bits)
         self.params = (shard_params_for_serving(params, mesh)
                        if mesh is not None else params)
         self.qcfg = qcfg
@@ -297,8 +307,8 @@ class ContinuousEngine:
 
         self.stats = stats if stats is not None else ServeStats(n_slots=n_slots)
         self.stats.n_slots = n_slots
-        self.stats.weight_bytes_fp, self.stats.weight_bytes_int8 = \
-            resident_weight_bytes(self.params)
+        (self.stats.weight_bytes_fp, self.stats.weight_bytes_int8,
+         self.stats.weight_bytes_int4) = resident_weight_bytes(self.params)
 
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, b, c, qcfg, cushion=cushion,
@@ -322,9 +332,19 @@ class ContinuousEngine:
                 row, self._init_cache(1), cushion, S),
             static_argnums=(1,))
         self.chunk_tokens: Optional[int] = None
-        if chunk_tokens is not None:
-            if chunk_tokens < 1:
-                raise ValueError(f"chunk_tokens {chunk_tokens} must be >= 1")
+        self.chunk_auto = False
+        if chunk_tokens == "auto":
+            # adaptive budget: the per-chunk token budget tracks decode
+            # pressure (see _chunk_budget) — big chunks when the pool
+            # idles (fast TTFT), small chunks when decode slots are
+            # near-full (each chunk stalls every live decoder, so a busy
+            # pool trades the prefiller's TTFT for the pool's TPOT)
+            self.chunk_auto = True
+            self.chunk_tokens = _AUTO_CHUNK_MAX
+        elif chunk_tokens is not None:
+            if isinstance(chunk_tokens, str) or chunk_tokens < 1:
+                raise ValueError(f"chunk_tokens {chunk_tokens!r} must be "
+                                 f">= 1 or the string 'auto'")
             # the per-step prefill token budget, bucketed to the power-of-
             # two family (min 8, PR 2's bucketing) so chunk executables are
             # shared across prompt lengths; prompts at or under one budget
@@ -601,9 +621,24 @@ class ContinuousEngine:
         if (self.chunk_tokens is not None
                 and self.api.supports_chunked_prefill
                 and not ({"patches", "frames"} & set(req.batch))
-                and req.batch["tokens"].shape[1] > self.chunk_tokens):
+                and req.batch["tokens"].shape[1] > self._chunk_budget()):
             return self._start_stream(req, free[0])
         return self._admit_request(req, free[0])
+
+    def _chunk_budget(self) -> int:
+        """Per-step prefill token budget. Fixed ``chunk_tokens`` unless
+        auto mode: then it shrinks with decode pressure — every chunk
+        stalls every live decoder for the chunk's prefill, so a near-full
+        pool runs small chunks (protect TPOT) while an idle pool runs big
+        ones (fewer interleave steps, better TTFT). Scales linearly from
+        ``_AUTO_CHUNK_MAX`` at 0 live decoders to ``_AUTO_CHUNK_MIN`` at a
+        full pool, bucketed to the same power-of-two executables as fixed
+        budgets."""
+        if not self.chunk_auto:
+            return self.chunk_tokens
+        pressure = float(self.live.sum()) / max(1, self.n_slots)
+        want = int(round(_AUTO_CHUNK_MAX * (1.0 - pressure)))
+        return bucket_steps(max(_AUTO_CHUNK_MIN, want))
 
     def step(self) -> List[int]:
         """Runs one prefill chunk of the oldest pending admission stream
@@ -831,7 +866,7 @@ class ContinuousEngine:
         if req.deadline_s is not None and self.now() > req.deadline_s:
             self._abort_stream(st, expired=True)
             return
-        c = min(self.chunk_tokens, st.total - st.done)
+        c = min(self._chunk_budget(), st.total - st.done)
         chunk = st.toks[:, st.done:st.done + c]
         with SH.use_mesh(self.mesh):
             if st.done == 0:

@@ -284,3 +284,81 @@ if hypothesis is not None:
         computes a row, never its decoded token."""
         api, params, cushion = _setup()
         _check_split(api, params, cushion, sorted(cuts))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive budget (chunk_tokens="auto")
+# ---------------------------------------------------------------------------
+
+def test_auto_budget_tracks_slot_pressure():
+    """The adaptive budget slides from the max (idle pool: admit in one
+    bite, best TTFT) down toward the floor as decode slots fill (busy
+    pool: small bites protect the decoders' TPOT), always landing on the
+    same power-of-two buckets as a fixed budget."""
+    from repro.serving.scheduler import _AUTO_CHUNK_MAX, _AUTO_CHUNK_MIN
+    api, params, cushion = _setup()
+    ce = ContinuousEngine(api, params, QN, n_slots=4, max_seq=128,
+                          cushion=cushion, chunk_tokens="auto")
+    ce.start()
+    assert ce.chunk_auto
+    assert ce._chunk_budget() == _AUTO_CHUNK_MAX      # empty pool
+    budgets = [ce._chunk_budget()]
+    for i in range(4):
+        assert ce.try_admit(Request(
+            uid=i, batch=api.make_batch(jax.random.PRNGKey(i), 1, 8),
+            max_new_tokens=30))
+        budgets.append(ce._chunk_budget())
+    assert budgets == sorted(budgets, reverse=True), \
+        f"budget must shrink monotonically with occupancy: {budgets}"
+    assert budgets[-1] == bucket_steps(_AUTO_CHUNK_MIN)  # full pool: floor
+    # draining the pool grows the budget back
+    while ce.live_count:
+        ce.step()
+    ce.pop_finished()
+    assert ce._chunk_budget() == _AUTO_CHUNK_MAX
+
+
+def test_auto_budget_streams_more_under_load_with_parity():
+    """The TTFT/TPOT trade-off direction: the same long prompt admits in
+    one blocking bite on an idle pool (zero streamed chunks — minimal
+    TTFT) but streams in several small chunks when decode slots are busy
+    (decoders keep stepping between bites — their TPOT is protected), and
+    either way retires with exactly the static Engine's tokens."""
+    api, params, cushion = _setup()
+    long_req = lambda: Request(
+        uid=99, batch=api.make_batch(jax.random.PRNGKey(50), 1, 80),
+        max_new_tokens=6)
+
+    # idle pool: budget at the max, 80-token prompt admits blocking
+    idle = ContinuousEngine(api, params, QN, n_slots=4, max_seq=128,
+                            cushion=cushion, chunk_tokens="auto")
+    out_idle = idle.run([long_req()])
+    assert idle.stats.prefill_chunks == 0
+
+    # busy pool: three decoders live shrink the budget below the prompt
+    busy = ContinuousEngine(api, params, QN, n_slots=4, max_seq=128,
+                            cushion=cushion, chunk_tokens="auto")
+    busy.start()
+    for i in range(3):
+        assert busy.try_admit(Request(
+            uid=i, batch=api.make_batch(jax.random.PRNGKey(i), 1, 8),
+            max_new_tokens=25))
+    assert busy.try_admit(long_req())
+    assert busy.is_prefilling(99), \
+        "near-full pool must shrink the budget below the prompt length"
+    while busy.live_count or busy.prefilling:
+        busy.step()
+    out_busy = [o for o in busy.pop_finished() if o.uid == 99]
+    assert busy.stats.prefill_chunks >= 2
+
+    eng = Engine(api, params, QN, cushion=cushion, max_seq=128)
+    ref = eng.generate(long_req().batch, 6).tokens[0]
+    np.testing.assert_array_equal(out_idle[0].tokens, ref)
+    np.testing.assert_array_equal(out_busy[0].tokens, ref)
+
+
+def test_auto_budget_validation():
+    api, params, cushion = _setup()
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ContinuousEngine(api, params, QN, n_slots=1, max_seq=128,
+                         cushion=cushion, chunk_tokens="adaptive")

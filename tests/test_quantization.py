@@ -1,10 +1,9 @@
-"""Property tests for the quantization core (paper §3)."""
-import pytest
+"""Property tests for the quantization core (paper §3).
 
-hypothesis = pytest.importorskip("hypothesis")
-hnp = pytest.importorskip("hypothesis.extra.numpy")
-st = pytest.importorskip("hypothesis.strategies")
-
+The hypothesis-based properties skip individually when hypothesis isn't
+installed; the module must NOT importorskip at the top level — the
+deterministic contract tests below (range convention, int4 round-trip,
+outlier premises) have to run everywhere."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,45 +12,53 @@ import pytest
 from repro.configs import QuantConfig
 from repro.core import quantization as Q
 
-settings = hypothesis.settings(max_examples=25, deadline=None)
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:     # pragma: no cover
+    hypothesis = hnp = st = None
 
-floats = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False,
-                   width=32)
+if hypothesis is not None:
+    settings = hypothesis.settings(max_examples=25, deadline=None)
 
+    floats = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False,
+                       width=32)
 
-@settings
-@hypothesis.given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2,
-                                                          max_dims=3,
-                                                          max_side=16),
-                             elements=floats),
-                  st.sampled_from([4, 6, 8]),
-                  st.booleans())
-def test_quant_roundtrip_error_bound(x, bits, symmetric):
-    """|x - dq(q(x))| <= scale/2 elementwise within the clip range."""
-    x = jnp.asarray(x)
-    mn, mx = Q.act_minmax(x, per_token=False)
-    scale, zero = Q.params_from_minmax(mn, mx, bits, symmetric)
-    xq = Q.dequantize(Q.quantize(x, scale, zero, bits, symmetric),
-                      scale, zero)
-    # inside the representable range the error is at most half a step
-    lo = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[0]), scale, zero)
-    hi = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[1]), scale, zero)
-    inside = (x >= lo) & (x <= hi)
-    err = jnp.abs(x - xq)
-    assert np.all(np.asarray(err[inside]) <= float(scale) / 2 + 1e-4)
+    @settings
+    @hypothesis.given(hnp.arrays(np.float32,
+                                 hnp.array_shapes(min_dims=2, max_dims=3,
+                                                  max_side=16),
+                                 elements=floats),
+                      st.sampled_from([4, 6, 8]),
+                      st.booleans())
+    def test_quant_roundtrip_error_bound(x, bits, symmetric):
+        """|x - dq(q(x))| <= scale/2 elementwise within the clip range."""
+        x = jnp.asarray(x)
+        mn, mx = Q.act_minmax(x, per_token=False)
+        scale, zero = Q.params_from_minmax(mn, mx, bits, symmetric)
+        xq = Q.dequantize(Q.quantize(x, scale, zero, bits, symmetric),
+                          scale, zero)
+        # inside the representable range the error is at most half a step
+        lo = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[0]),
+                          scale, zero)
+        hi = Q.dequantize(jnp.asarray(Q.qrange(bits, symmetric)[1]),
+                          scale, zero)
+        inside = (x >= lo) & (x <= hi)
+        err = jnp.abs(x - xq)
+        assert np.all(np.asarray(err[inside]) <= float(scale) / 2 + 1e-4)
 
-
-@settings
-@hypothesis.given(hnp.arrays(np.float32, (8, 16), elements=floats),
-                  st.sampled_from([6, 8]))
-def test_fake_quant_idempotent(x, bits):
-    x = jnp.asarray(x)
-    mn, mx = Q.act_minmax(x, per_token=False)
-    scale, zero = Q.params_from_minmax(mn, mx, bits, False)
-    y1 = Q.fake_quant(x, scale, zero, bits, False)
-    y2 = Q.fake_quant(y1, scale, zero, bits, False)
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
-                               rtol=1e-5, atol=1e-5)
+    @settings
+    @hypothesis.given(hnp.arrays(np.float32, (8, 16), elements=floats),
+                      st.sampled_from([6, 8]))
+    def test_fake_quant_idempotent(x, bits):
+        x = jnp.asarray(x)
+        mn, mx = Q.act_minmax(x, per_token=False)
+        scale, zero = Q.params_from_minmax(mn, mx, bits, False)
+        y1 = Q.fake_quant(x, scale, zero, bits, False)
+        y2 = Q.fake_quant(y1, scale, zero, bits, False)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_ste_gradient_identity_in_range():
@@ -179,3 +186,65 @@ def test_prequantized_forward_close_to_fp():
     out, _ = api.forward(pq, b, qcfg, scales=scales)
     rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
     assert rel < 0.25, rel
+
+
+# ---------------------------------------------------------------------------
+# Sub-8-bit range convention: restricted symmetric [-
+# (2^(b-1)-1), 2^(b-1)-1], never the full two's-complement [-8, 7] at 4
+# bits. Every quantizer routes through qrange, so fake-quant calibration
+# and the true int4-packed inference path live on the same grid; these pin
+# that agreement so a "use the whole nibble" change can't silently split
+# the two worlds.
+# ---------------------------------------------------------------------------
+
+def test_int4_range_is_restricted_symmetric():
+    assert Q.qrange(4, True) == (-7, 7)
+    assert Q.qrange(4, False) == (0, 15)
+    # symmetric scale divides by the restricted qmax
+    scale, zero = Q.params_from_minmax(jnp.float32(-2.1), jnp.float32(2.1),
+                                       4, True)
+    np.testing.assert_allclose(float(scale), 2.1 / 7, rtol=1e-6)
+    assert float(zero) == 0.0
+
+
+@pytest.mark.parametrize("bits", [4, 6])
+def test_sub8_quantizers_never_emit_full_range_min(bits):
+    """quantize / fake_quant / weight_quant_int / weight_quant_int4 all
+    clip to the restricted grid — -2^(b-1) never appears, even for inputs
+    far below -amax*(qmax+1)/qmax (the value that would round there)."""
+    cfg = QuantConfig(mode="pt_static", w_bits=bits, true_int8=True)
+    rng = np.random.RandomState(bits)
+    w = jnp.asarray(rng.randn(64, 16).astype(np.float32))
+    w = w.at[0, 0].set(-100.0).at[1, 1].set(100.0)   # clip-range extremes
+    lo = -(2 ** (bits - 1) - 1)
+    wq, scale = Q.weight_quant_int(w, cfg)
+    assert int(wq.min()) >= lo and int(wq.max()) <= -lo
+    amax = jnp.max(jnp.abs(w))
+    s, z = Q.params_from_minmax(-amax, amax, bits, True)
+    assert int(Q.quantize(w, s, z, bits, True).min()) >= lo
+    fq = Q.fake_quant(w, s, z, bits, True)
+    assert float(fq.min()) >= lo * float(s) - 1e-6
+    if bits == 4:
+        wq4, s4, g = Q.weight_quant_int4(w, cfg)
+        assert int(wq4.min()) >= -7 and int(wq4.max()) <= 7
+
+
+def test_weight_quant_int4_roundtrips_fake_quant_bit_identically():
+    """dequant(weight_quant_int4(w)) == weight_fake_quant(w) at 4 bits,
+    bit-for-bit: both derive the same group amax -> restricted scale ->
+    rounded grid, so fake-quant calibration statistics describe exactly
+    what the packed path serves."""
+    cfg = QuantConfig(mode="pt_static", w_bits=4, true_int8=True)
+    rng = np.random.RandomState(0)
+    for d_in in (256, 33):      # grouped (2x128) and indivisible fallback
+        w = jnp.asarray(rng.randn(d_in, 24).astype(np.float32))
+        wq, scale, g = Q.weight_quant_int4(w, cfg)
+        dq = wq.astype(jnp.float32).reshape(d_in // g, g, 24) \
+            * scale[:, None, :]
+        fq = Q.weight_fake_quant(w, cfg)
+        np.testing.assert_array_equal(np.asarray(dq.reshape(d_in, 24)),
+                                      np.asarray(fq))
+        # and the packed round-trip serves those exact integers
+        np.testing.assert_array_equal(
+            np.asarray(Q.unpack_int4(Q.pack_int4(wq), d_in)),
+            np.asarray(wq))

@@ -1,0 +1,300 @@
+"""W4A8 (int4-packed weights, int8 activations) serving-path contract:
+
+* pack/unpack round-trip — ``pack_int4``/``unpack_int4`` are exact inverses
+  over the full signed nibble range [-8, 7] for even AND odd K (the odd
+  tail nibble is zero-padded and sliced back off), pinned by parametrized
+  cases and a hypothesis property when hypothesis is installed;
+* three-way matmul parity — the Pallas unpack-in-VMEM kernel
+  (``w4a8_matmul``, interpret mode off-TPU), the jnp fallback inside
+  ``prequantized_int_dot`` and the pure-jnp oracle (``w4a8_matmul_ref``)
+  agree on ragged token counts, group boundaries and asymmetric activation
+  zero-points. Tolerance is rtol=1e-4/atol=1e-3 — looser than W8A8's
+  because the three routes order the group-scale f32 accumulation
+  differently (per-group subtract, folded-scale single GEMM, per-block
+  scaled accumulate) and only agree to f32 rounding, not bit-identically;
+* the ``REPRO_W4A8_KERNEL`` routing flag, outside and inside jit (decode
+  scans trace qdot under jit, so routing must hold there);
+* ``prequantize(weight_bits=4)`` format — packed shape ceil(K/2),
+  group-wise scales, scaled colsum — including odd-K and
+  group-indivisible fallbacks, plus ``prequantize_tree`` over stacked
+  (scan-layer) leaves;
+* engine-level: int4-resident generation is token-identical across kernel
+  routes, ``weight_bytes_int4`` accounting is exactly half the int8
+  residency, and the weight_bits guards refuse unsupported widths and
+  non-prequantized int4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.flags as flags
+from repro.configs import QuantConfig, get_config
+from repro.core import quantization as Q
+from repro.kernels import ref as R
+from repro.kernels.w4a8_matmul import w4a8_matmul
+from repro.models.registry import build
+from repro.serving import ContinuousEngine, Engine
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:     # pragma: no cover
+    hypothesis = hnp = st = None
+
+QW8 = QuantConfig(mode="pt_static", true_int8=True)
+
+
+def _site_for(x):
+    scale, zero = Q.params_from_minmax(jnp.min(x), jnp.max(x), 8, False)
+    return Q.SiteScale(scale=scale, zero=zero)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 2, 7, 8, 33, 256])
+def test_pack_unpack_roundtrip(K):
+    """Exact inverse over the full signed nibble range, even and odd K."""
+    rng = np.random.RandomState(K)
+    wq = jnp.asarray(rng.randint(-8, 8, (K, 24)), jnp.int8)
+    packed = Q.pack_int4(wq)
+    assert packed.shape == ((K + 1) // 2, 24) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(Q.unpack_int4(packed, K)),
+                                  np.asarray(wq))
+
+
+def test_pack_unpack_extreme_nibbles():
+    """-8 (0b1000: sign-extension pivot) and 7 survive both nibble slots."""
+    wq = jnp.asarray([[-8, 7], [7, -8], [-8, -8], [7, 7], [-1, 0]],
+                     jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(Q.unpack_int4(Q.pack_int4(wq), 5)), np.asarray(wq))
+
+
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        st.integers(min_value=1, max_value=70),
+        st.integers(min_value=1, max_value=16),
+        st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def test_pack_unpack_roundtrip_property(k, n, seed):
+        """ANY (K, N) in-range int4 matrix round-trips exactly — odd K,
+        K straddling pack-pair and group boundaries, extreme nibbles."""
+        rng = np.random.RandomState(seed)
+        wq = jnp.asarray(rng.randint(-8, 8, (k, n)), jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(Q.unpack_int4(Q.pack_int4(wq), k)), np.asarray(wq))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level three-way parity
+# ---------------------------------------------------------------------------
+
+def _packed_case(rng, M, K, N, group):
+    x = jnp.asarray(rng.randint(-128, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.randint(-7, 8, (K, N)), jnp.int8)
+    s_w = jnp.asarray(rng.rand(K // group, N).astype(np.float32) * 0.02
+                      + 1e-3)
+    colsum_g = jnp.sum(wq.astype(jnp.int32).reshape(K // group, group, N),
+                       axis=1)
+    colsum = jnp.sum(colsum_g.astype(jnp.float32) * s_w, axis=0)
+    return x, Q.pack_int4(wq), s_w, colsum
+
+
+@pytest.mark.parametrize("M", [37, 128, 300])
+@pytest.mark.parametrize("group", [64, 256])
+def test_w4a8_kernel_ref_parity_ragged(M, group):
+    """Pallas kernel == jnp oracle on ragged M with an asymmetric activation
+    zero-point, for a multi-group and a single-group contraction."""
+    rng = np.random.RandomState(M + group)
+    K, N = 256, 128
+    x, packed, s_w, colsum = _packed_case(rng, M, K, N, group)
+    s_x, z_x = 0.013, -3.0
+    ref = R.w4a8_matmul_ref(x, packed, jnp.float32(s_x), jnp.float32(z_x),
+                            s_w, group_size=group)
+    out = w4a8_matmul(x, packed, s_x, z_x, s_w, colsum, group_size=group,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_w4a8_three_way_parity_serving_dot():
+    """qdot on an int4-prequantized weight (jnp route AND forced-Pallas
+    route) matches the oracle fed the same packed tensor — the serving dot,
+    the kernel and the reference agree on what the format means."""
+    rng = np.random.RandomState(0)
+    M, K, N = 50, 256, 128
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32) * 2 + 0.7)
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32) * 0.1)
+    site = _site_for(x)
+    assert float(site.zero) != 0.0, "case must exercise the zero-point"
+    cfg = QW8
+    pq = Q.prequantize(w, cfg, weight_bits=4)
+    group = K // pq["w_scale"].shape[0]
+
+    # oracle on the exact serving quantization of x (int8 offset by -128)
+    xq = (Q.quantize(x, site.scale, site.zero, 8, False) - 128)
+    ref = R.w4a8_matmul_ref(xq.astype(jnp.int8), pq["w_packed"],
+                            jnp.asarray(site.scale, jnp.float32),
+                            jnp.asarray(site.zero - 128.0, jnp.float32),
+                            pq["w_scale"], group_size=group)
+    for route in ("jnp", "pallas"):
+        old = flags.W4A8_KERNEL
+        flags.W4A8_KERNEL = route
+        try:
+            out = Q.qdot(x, pq, cfg, site)
+        finally:
+            flags.W4A8_KERNEL = old
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=route)
+
+
+def test_w4a8_kernel_routing_flag(monkeypatch):
+    """REPRO_W4A8_KERNEL=pallas routes the int4 serving dot through the
+    Pallas kernel (interpret off-TPU) with the same numbers as the jnp
+    fallback — outside AND inside jit."""
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(3, 19, 256).astype(np.float32))
+    w = jnp.asarray(rng.randn(256, 128).astype(np.float32) * 0.1)
+    site = _site_for(x)
+    pq = Q.prequantize(w, QW8, weight_bits=4)
+
+    monkeypatch.setattr(flags, "W4A8_KERNEL", "jnp")
+    ref = Q.qdot(x, pq, QW8, site)
+    monkeypatch.setattr(flags, "W4A8_KERNEL", "pallas")
+    out = Q.qdot(x, pq, QW8, site)
+    jit_out = jax.jit(lambda x: Q.qdot(x, pq, QW8, site))(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(jit_out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# prequantize format
+# ---------------------------------------------------------------------------
+
+def test_prequantize_int4_format():
+    rng = np.random.RandomState(1)
+    w = jnp.asarray(rng.randn(256, 96).astype(np.float32))
+    pq = Q.prequantize(w, QW8, weight_bits=4)
+    G = 256 // QW8.w_group
+    assert pq["w_packed"].shape == (128, 96)
+    assert pq["w_packed"].dtype == jnp.int8
+    assert pq["w_scale"].shape == (G, 96)
+    assert pq["colsum"].shape == (96,)
+    # colsum carries the group scales: equals sum_k s_w[g(k)] * wq[k]
+    wq = Q.unpack_int4(pq["w_packed"], 256).astype(jnp.float32)
+    s_full = jnp.repeat(pq["w_scale"], QW8.w_group, axis=0)
+    np.testing.assert_allclose(np.asarray(pq["colsum"]),
+                               np.asarray(jnp.sum(wq * s_full, axis=0)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_prequantize_int4_odd_and_indivisible_K():
+    """K that the configured group doesn't divide falls back to one
+    per-column group; odd K packs ceil(K/2) byte rows."""
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(33, 16).astype(np.float32))
+    pq = Q.prequantize(w, QW8, weight_bits=4)
+    assert pq["w_packed"].shape == (17, 16)
+    assert pq["w_scale"].shape == (1, 16)
+    x = jnp.asarray(rng.randn(4, 33).astype(np.float32))
+    site = _site_for(x)
+    ref = Q.qdot(x, w, QuantConfig(mode="pt_static", true_int8=False,
+                                   w_bits=4), site)
+    out = Q.qdot(x, pq, QW8, site)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_prequantize_tree_int4_stacked_leaves():
+    """Scan-stacked (L, K, N) leaves prequantize per layer slice; packed
+    dicts replace exactly the leaves the int8 tree converts."""
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    p = api.init_params(jax.random.PRNGKey(0))
+    p8 = Q.prequantize_tree(p, QW8)
+    p4 = Q.prequantize_tree(p, QW8, weight_bits=4)
+    flat8 = {k: v for k, v in jax.tree_util.tree_flatten_with_path(p8)[0]}
+    flat4 = {k: v for k, v in jax.tree_util.tree_flatten_with_path(p4)[0]}
+    packed = [k for k in flat4 if "w_packed" in str(k[-1])]
+    assert packed, "no packed leaves produced"
+    assert len(packed) == len(
+        [k for k in flat8 if "w_int" in str(k[-1])])
+    for kp in packed:
+        k8 = kp[:-1] + (jax.tree_util.DictKey("w_int"),)
+        assert flat4[kp].dtype == jnp.int8
+        # packed K/2 rows on the stacked leaf's contracting axis
+        assert flat4[kp].shape[-2] == -(-flat8[k8].shape[-2] // 2)
+    with pytest.raises(ValueError, match="weight_bits"):
+        Q.prequantize_tree(p, QW8, weight_bits=3)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: generation parity, residency accounting, guards
+# ---------------------------------------------------------------------------
+
+def _setup():
+    cfg = get_config("paper_tiny")
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cal = [api.make_batch(jax.random.PRNGKey(100 + i), 2, 32)
+           for i in range(2)]
+    batch = api.make_batch(jax.random.PRNGKey(7), 2, 24)
+    return api, params, cal, batch
+
+
+def test_w4a8_engine_route_parity_and_bytes(monkeypatch):
+    """int4-resident generation is token-identical between the jnp fallback
+    and the forced-Pallas route, and the packed residency is exactly half
+    the int8 residency (2 nibbles/byte over the same weight set)."""
+    api, params, cal, batch = _setup()
+    e8 = Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+                prequant=True)
+    monkeypatch.setattr(flags, "W4A8_KERNEL", "jnp")
+    e4j = Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+                 prequant=True, weight_bits=4)
+    r_jnp = e4j.generate(batch, 8)
+    monkeypatch.setattr(flags, "W4A8_KERNEL", "pallas")
+    e4p = Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+                 prequant=True, weight_bits=4)
+    r_pal = e4p.generate(batch, 8)
+    np.testing.assert_array_equal(r_pal.tokens, r_jnp.tokens)
+    assert e4j.weight_bytes_int4 == e8.weight_bytes_int8 // 2
+    assert e4j.weight_bytes_int8 == 0 and e8.weight_bytes_int4 == 0
+
+
+def test_w4a8_continuous_engine_matches_static(monkeypatch):
+    """ContinuousEngine(weight_bits=4) serves the same packed tree as the
+    static Engine: greedy tokens agree request-for-request."""
+    monkeypatch.setattr(flags, "W4A8_KERNEL", "jnp")
+    api, params, cal, batch = _setup()
+    eng = Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+                 prequant=True, weight_bits=4)
+    want = eng.generate(batch, 8).tokens
+    ce = ContinuousEngine(api, params, QW8, n_slots=2, max_seq=96,
+                          calib_batches=cal, prequant=True, weight_bits=4)
+    assert ce.stats.weight_bytes_int4 > 0
+    from repro.serving.scheduler import Request
+    outs = ce.run([Request(uid=i, batch={"tokens": batch["tokens"][i:i + 1]},
+                           max_new_tokens=8) for i in range(2)])
+    got = np.stack([o.tokens for o in sorted(outs, key=lambda o: o.uid)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_weight_bits_guards():
+    api, params, cal, _ = _setup()
+    with pytest.raises(ValueError, match="weight_bits"):
+        Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+               prequant=True, weight_bits=3)
+    with pytest.raises(ValueError, match="prequant"):
+        Engine(api, params, QW8, max_seq=96, calib_batches=cal,
+               weight_bits=4)
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError, match="weight_bits"):
+        Q.prequantize(jnp.asarray(rng.randn(16, 8), jnp.float32), QW8,
+                      weight_bits=5)

@@ -234,10 +234,10 @@ def test_resident_weight_bytes_accounting():
     cfg = get_config("paper_tiny")
     api = build(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
-    fp0, i80 = resident_weight_bytes(params)
-    assert i80 == 0 and fp0 > 0
+    fp0, i80, i40 = resident_weight_bytes(params)
+    assert i80 == 0 and i40 == 0 and fp0 > 0
     pq = Q.prequantize_tree(params, QW8)
-    fp1, i81 = resident_weight_bytes(pq)
-    assert i81 > 0
+    fp1, i81, i41 = resident_weight_bytes(pq)
+    assert i81 > 0 and i41 == 0
     # every int8 byte replaced >= 1 byte of fp storage (fp32/bf16 params)
     assert fp0 - fp1 >= i81
